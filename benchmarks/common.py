@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def time_us(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    try:  # block on async dispatch
+        import jax
+
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,49 @@
+"""Paper Fig. 2: required workers vs s/t for all five schemes.
+
+Operating point: m=36000, st=36, z=42 (paper §VI).  Emits CSV rows
+``fig2,<s>,<t>,<s/t>,<age>,<entangled>,<ssmm>,<gcsa>,<polydot>,<lam*>``
+and asserts the paper's qualitative claims (AGE ≤ all; == Entangled t ≤ 3).
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    all_worker_counts,
+    n_age_cmpc,
+    n_entangled_cmpc,
+    optimal_lambda,
+)
+
+ST_PAIRS = [(1, 36), (2, 18), (3, 12), (4, 9), (6, 6), (9, 4),
+            (12, 3), (18, 2), (36, 1)]
+Z = 42
+
+
+def rows():
+    out = []
+    for s, t in ST_PAIRS:
+        c = all_worker_counts(s, t, Z)
+        lam = optimal_lambda(s, t, Z)
+        out.append((s, t, s / t, c["age"], c["entangled"], c["ssmm"],
+                    c["gcsa_na"], c["polydot"], lam))
+    return out
+
+
+def main():
+    print("table,s,t,s_over_t,age,entangled,ssmm,gcsa_na,polydot,lambda_star")
+    for r in rows():
+        print("fig2," + ",".join(str(x) for x in r))
+        s, t = r[0], r[1]
+        assert r[3] == min(r[3:8]), f"AGE not minimal at s={s},t={t}"
+        if t <= 3:
+            assert r[3] == r[4], f"AGE != Entangled at t={t} <= 3"
+    # Example 1 check (paper worked example)
+    assert n_age_cmpc(2, 2, 2) == 17 and n_entangled_cmpc(2, 2, 2) == 19
+    print("fig2,check,example1,N_age=17,N_entangled=19,OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-path timing plus
+the jnp oracle timing (CPU wall time; TPU perf comes from §Roofline, not
+from this box).  Emits ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit, time_us  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.modmatmul import modmatmul  # noqa: E402
+from repro.kernels.polyeval import polyeval  # noqa: E402
+from repro.mpc.field import P_DEFAULT  # noqa: E402
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # phase-2 worker matmul at a realistic worker block size
+    m = 512
+    a = jnp.asarray(rng.integers(0, P_DEFAULT, (m, m)), jnp.int64)
+    b = jnp.asarray(rng.integers(0, P_DEFAULT, (m, m)), jnp.int64)
+
+    jit_ref = jax.jit(lambda x, y: ref.modmatmul_ref(x, y, p=P_DEFAULT))
+    us = time_us(jit_ref, a, b, iters=3)
+    flops = 2 * m**3
+    emit("modmatmul_ref_jnp_512", us, f"{flops/us/1e3:.2f}GFLOP/s-cpu")
+
+    us = time_us(lambda: modmatmul(a, b, p=P_DEFAULT, interpret=True),
+                 iters=1, warmup=1)
+    emit("modmatmul_pallas_interp_512", us, "correctness-path")
+
+    # share evaluation (phase 1): N=476 workers, 78 terms, 4096-col blocks
+    vand = jnp.asarray(rng.integers(0, P_DEFAULT, (476, 78)), jnp.int64)
+    terms = jnp.asarray(rng.integers(0, P_DEFAULT, (78, 4096)), jnp.int64)
+    jit_pe = jax.jit(lambda v, t: ref.polyeval_ref(v, t, p=P_DEFAULT))
+    us = time_us(jit_pe, vand, terms, iters=3)
+    emit("polyeval_ref_jnp_476x78x4096", us, "phase1-share-eval")
+    us = time_us(lambda: polyeval(vand, terms, p=P_DEFAULT, interpret=True),
+                 iters=1, warmup=1)
+    emit("polyeval_pallas_interp", us, "correctness-path")
+
+    # flash attention oracle vs pallas-interpret
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 2, 64), jnp.float32)
+    jit_fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = time_us(jit_fa, q, k, k, iters=3)
+    emit("attention_ref_jnp_512", us, "gqa-4to1")
+
+    # rwkv6 oracle
+    r = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 4, 64))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 256, 4, 64))
+    u = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+    jit_wk = jax.jit(lambda r, k, v, w, u: ref.rwkv6_ref(r, k, v, w, u))
+    us = time_us(jit_wk, r, r, v, r, u, iters=3)
+    emit("rwkv6_ref_jnp_T256", us, "wkv-scan")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Re-run the loop-aware HLO analysis over saved .hlo.txt.gz artifacts and
+update the JSONs in place (no recompilation needed)."""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+
+
+def main(out_dir="results/dryrun"):
+    for jf in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        hf = jf.replace(".json", ".hlo.txt.gz")
+        if not os.path.exists(hf):
+            print("skip (no hlo):", jf)
+            continue
+        with gzip.open(hf, "rt") as f:
+            text = f.read()
+        rec = json.load(open(jf))
+        rec["hlo_analysis"] = analyze(text)
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("reanalyzed", os.path.basename(jf))
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

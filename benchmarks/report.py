@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+``results/dryrun/*.json``.
+
+    python benchmarks/report.py [results/dryrun] > results/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.roofline import derive  # noqa: E402
+
+
+def _fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.2f}M"
+    return f"{b/1e3:.1f}K"
+
+
+def load(out_dir):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        if "hlo_analysis" in r:
+            recs.append(r)
+    return recs
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | kind | compile s | params/dev | "
+          "temp/dev | flops/dev | HBM B/dev | coll B/dev (AR/AG/RS/A2A/CP) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        h = r["hlo_analysis"]
+        mesh = "×".join(str(v) for v in r["mesh"].values())
+        cb = h["collective_bytes"]
+        coll = "/".join(_fmt_bytes(cb.get(k, 0)) for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        mem = r.get("memory", {})
+        arg = mem.get("argument_size_in_bytes", 0)
+        tmp = mem.get("temp_size_in_bytes", 0)
+        n_w = r.get("n_workers")
+        extra = f" (N={n_w})" if n_w else ""
+        print(f"| {r['arch']}{extra} | {r['shape']} | {mesh} "
+              f"| {r.get('kind','mpc')} | {r.get('compile_s','-')} "
+              f"| {_fmt_bytes(arg)} | {_fmt_bytes(tmp)} "
+              f"| {h['flops']:.2e} | {_fmt_bytes(h['hbm_bytes'])} "
+              f"| {coll} |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | mesh | t_comp s | t_mem s | t_coll s | "
+          "bottleneck | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if "kind" not in r or r["kind"] is None:
+            continue
+        d = derive(r)
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {d['t_compute_s']:.3e} | {d['t_memory_s']:.3e} "
+              f"| {d['t_collective_s']:.3e} | {d['bottleneck']} "
+              f"| {d['useful_ratio']:.3f} | {d['mfu_bound']:.3f} |")
+
+
+def main(out_dir="results/dryrun"):
+    recs = load(out_dir)
+    print("### Dry-run artifacts\n")
+    dryrun_table(recs)
+    print("\n### Roofline terms (single-pod 16×16 unless noted)\n")
+    roofline_table([r for r in recs
+                    if "pod" not in r["mesh"]])
+    print("\n### Multi-pod (2×16×16) pass\n")
+    roofline_table([r for r in recs if "pod" in r["mesh"]])
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

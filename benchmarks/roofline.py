@@ -1,0 +1,85 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts in ``results/dryrun/``.
+
+    t_compute    = flops_per_device / 197e12        (bf16 MXU peak, v5e)
+    t_memory     = hbm_bytes_per_device / 819e9     (HBM bandwidth)
+    t_collective = collective_bytes_per_device / 50e9  (ICI per link)
+
+FLOPs/bytes are the loop-aware per-device totals from
+``repro.launch.hlo_analysis`` (XLA's cost_analysis undercounts scan bodies).
+MODEL_FLOPS = 6·N·D (train; active params for MoE) or 2·N·D (inference).
+``mfu_bound`` = MODEL_FLOPS-time / dominant-term time — the achievable MFU
+upper bound for the compiled program ("roofline fraction").
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def derive(rec: dict) -> dict:
+    h = rec["hlo_analysis"]
+    n_dev = rec.get("n_devices") or int(
+        __import__("math").prod(rec["mesh"].values()))
+    t_comp = h["flops"] / PEAK_FLOPS
+    t_mem = h["hbm_bytes"] / HBM_BW
+    t_coll = h["collective_total_bytes"] / ICI_BW
+    dominant = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1])
+    n_active = rec.get("active_param_count") or rec["param_count"]
+    mult = 6 if rec.get("kind") == "train" else 2
+    model_flops = mult * n_active * rec["tokens"]
+    t_model = model_flops / (n_dev * PEAK_FLOPS)
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "x".join(str(v) for v in rec["mesh"].values()),
+        "kind": rec.get("kind"),
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dominant[0],
+        "model_flops": model_flops,
+        "hlo_flops_global": h["flops"] * n_dev,
+        "useful_ratio": model_flops / max(h["flops"] * n_dev, 1.0),
+        "mfu_bound": t_model / bound if bound else 0.0,
+        "temp_gb_per_dev": rec.get("memory", {}).get(
+            "temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def main(out_dir: str = "results/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        print("roofline,no-dryrun-artifacts-found")
+        return []
+    rows = []
+    for f in files:
+        rec = json.load(open(f))
+        if "hlo_analysis" not in rec or rec.get("kind") is None:
+            continue
+        d = derive(rec)
+        rows.append(d)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("table,arch,shape,mesh,kind,t_compute_s,t_memory_s,"
+          "t_collective_s,bottleneck,useful_ratio,mfu_bound,temp_gb")
+    for r in rows:
+        print(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},{r['kind']},"
+            f"{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},"
+            f"{r['t_collective_s']:.4e},{r['bottleneck']},"
+            f"{r['useful_ratio']:.3f},{r['mfu_bound']:.3f},"
+            f"{r['temp_gb_per_dev']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,38 @@
+"""Benchmark aggregator — one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``
+
+Emits ``name,us_per_call,derived`` CSV (kernel/protocol benches) plus the
+paper-figure tables (fig2 / fig3a-c) and, when dry-run artifacts exist,
+the roofline table.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from benchmarks import (  # noqa: WPS433
+        fig2_workers,
+        fig3_overheads,
+        kernel_bench,
+        protocol_bench,
+        roofline,
+    )
+
+    print("== fig2: required workers (paper Fig. 2) ==")
+    fig2_workers.main()
+    print("== fig3: storage/computation/communication (paper Fig. 3) ==")
+    fig3_overheads.main()
+    print("== kernels (name,us_per_call,derived) ==")
+    kernel_bench.main()
+    print("== protocol end-to-end ==")
+    protocol_bench.main()
+    print("== roofline (from dry-run artifacts, if present) ==")
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

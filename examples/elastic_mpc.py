@@ -1,0 +1,31 @@
+"""Elastic worker-pool demo: spares, phase-2 failures, re-planning.
+
+    PYTHONPATH=src python examples/elastic_mpc.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.mpc.elastic import ElasticPool  # noqa: E402
+
+pool = ElasticPool(s=2, t=2, z=2, m=8, spares=3)
+print(f"plan: N={pool.proto.n_workers} workers + {pool.spares} spares; "
+      f"phase-3 tolerance {pool.phase3_tolerance()} failures")
+
+# lose two workers BEFORE the exchange: spares absorb them
+pool.fail([0, 7])
+idx, _ = pool.reconstruction_weights()
+print(f"after 2 failures: quorum from workers {idx[:5].tolist()}... "
+      f"(spares activated: {sorted(set(idx) - set(range(17)))})")
+
+# catastrophic loss: below N -> re-plan with coarser partitioning
+pool.fail(list(range(1, 12)))
+try:
+    pool.active_subset()
+except RuntimeError as e:
+    print("pool infeasible:", e)
+new = pool.replan()
+print(f"re-planned: (s={new.s}, t={new.t}) needs N={new.n_workers} "
+      f"<= {int(pool.alive.sum())} alive")

@@ -1,0 +1,89 @@
+"""Pallas finite-field matmul — the phase-2 worker hot loop.
+
+``O = (A @ B) mod p`` for field elements (int64 storage, values < p).
+
+TPU adaptation (DESIGN.md §3): the field ``p = 2²⁶ − 5`` is chosen so a
+*chunk-then-fold* schedule is exact — products are < 2⁵², so a K-block of up
+to 512 MACs accumulates in int64 without overflow; one modular fold per
+K-block keeps the running accumulator < p.  Blocks are MXU/VMEM shaped
+(128-aligned tiles); the fold happens on the resident output tile in VMEM so
+partial sums never round-trip to HBM.  (For the Mersenne-31 field the same
+schedule runs on 8-bit-limb MXU matmuls — see DESIGN.md; this kernel is the
+p < 2²⁶ fast path.)
+
+Validated against :func:`repro.kernels.ref.modmatmul_ref` in interpret mode
+(this container is CPU-only; ``interpret=True`` executes the same block
+program).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _modmatmul_kernel(a_ref, b_ref, o_ref, *, p: int, n_k: int):
+    """One (bm × bn) output tile; grid dim 2 walks the K blocks.
+
+    The output tile stays resident in VMEM across the K loop (same (i, j)
+    index for every k), acting as the modular accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    # exact: a,b < p = 2^26-5  =>  each product < 2^52; bk <= 512 products
+    # sum to < 2^61; + acc (< p per entry) stays inside int64.
+    prod = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int64
+    )
+    o_ref[...] = (o_ref[...] + prod) % p  # fold once per K block
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "bm", "bn", "bk", "interpret")
+)
+def modmatmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    p: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """``(a @ b) mod p`` with explicit VMEM tiling.
+
+    ``a: [M, K]``, ``b: [K, N]`` int64 field elements; shapes need not be
+    block multiples (padded here, sliced on return).  ``bk ≤ 512`` keeps the
+    int64 accumulation window exact for p < 2²⁶.
+    """
+    if bk > 512:
+        raise ValueError("bk > 512 overflows the exact int64 window for p<2^26")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = -(-m // bm_) * bm_, -(-n // bn_) * bn_, -(-k // bk_) * bk_
+    a = jnp.pad(a.astype(jnp.int64), ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(jnp.int64), ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_modmatmul_kernel, p=p, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int64),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

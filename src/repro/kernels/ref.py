@@ -1,0 +1,172 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def modmatmul_ref(a: jax.Array, b: jax.Array, *, p: int) -> jax.Array:
+    """Exact ``(a @ b) mod p`` folding per product (no overflow for p<2³¹)."""
+    a = jnp.asarray(a, jnp.int64)
+    b = jnp.asarray(b, jnp.int64)
+    # per-k outer products folded immediately: always exact, O(MKN) memory
+    # chunked over k to stay reasonable.
+    def body(carry, k):
+        acc = carry
+        prod = (a[:, k][:, None] * b[k, :][None, :]) % p
+        return (acc + prod) % p, None
+
+    init = jnp.zeros((a.shape[0], b.shape[1]), jnp.int64)
+    out, _ = jax.lax.scan(body, init, jnp.arange(a.shape[1]))
+    return out
+
+
+def polyeval_ref(vand: jax.Array, terms: jax.Array, *, p: int) -> jax.Array:
+    return modmatmul_ref(vand, terms, p=p)
+
+
+def rwkv6_scan_with_state(r, k, v, w, u, state0=None):
+    """Like :func:`rwkv6_ref` but also returns the final [B,H,K,V] state
+    (serving prefill needs it to seed decode)."""
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    b, t, h, dk = k.shape
+    dv = v.shape[-1]
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        decay = jnp.exp(-jnp.exp(w_t))
+        state = state * decay[..., None] + kv
+        return state, out
+
+    state0 = (jnp.zeros((b, h, dk, dv), jnp.float32)
+              if state0 is None else state0)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = 32, return_state: bool = False):
+    """Chunked-parallel WKV — mathematically identical to :func:`rwkv6_ref`.
+
+    Within a chunk of C steps (cumulative log-decay ``b_t = Σ_{τ≤t} -e^{w_τ}``):
+
+        out_t = (r_t ⊙ e^{b_{t-1}}) @ S₀                       (inter-chunk)
+              + Σ_{τ<t} [Σ_k r_t k_τ e^{b_{t-1}-b_τ}] v_τ      (intra, [C,C])
+              + (Σ_k r_t u k_t) v_t                            (bonus diag)
+        S_C   = diag(e^{b_C}) S₀ + (k ⊙ e^{b_C-b})ᵀ @ V
+
+    All exponents are ≤ 0 (numerically safe) and all heavy ops are matmuls —
+    the state round-trips HBM once per *chunk* instead of once per *step*,
+    which is the memory-roofline win recorded in EXPERIMENTS.md §Perf (and
+    the schedule the Pallas/TPU kernel implements in VMEM).
+    """
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    bsz, t, h, dk = k.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        # dt=0-like padding: decay 1 (w -> -inf gives ld=0? use ld=0 via
+        # w=-inf is awkward; instead pad with zeros and zero r/k so padded
+        # steps neither read nor write)
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=30.0)  # exp(-exp(30)) ~ 0 decay? see note
+        # note: padded steps have r=k=0 so their out/state contribution is 0
+        # regardless of decay; decay on padded steps only multiplies the
+        # state AFTER the last real step, which is never read back (the
+        # final state uses the last real chunk's b) — but to keep the
+        # chunk-end state exact for return_state, use ld=0 (no decay):
+        w = w.at[:, t:].set(-jnp.inf)  # ld = -exp(-inf) = 0
+    nc = (t + pad) // c
+    ld = -jnp.exp(w)                                       # [B,T,H,K]
+
+    def chunk_step(state, inp):
+        r_c, k_c, v_c, ld_c = inp                          # [B,C,H,K/V]
+        b = jnp.cumsum(ld_c, axis=1)                       # b_t (inclusive)
+        b_prev = b - ld_c                                  # b_{t-1}
+        q_t = r_c * jnp.exp(b_prev)
+        inter = jnp.einsum("bchk,bhkv->bchv", q_t, state)
+        diff = b_prev[:, :, None] - b[:, None]             # [B,C,C,H,K]
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)       # τ < t
+        expdiff = jnp.where(tri[None, :, :, None, None],
+                            jnp.exp(diff), 0.0)
+        amat = jnp.einsum("bthk,bshk,btshk->bths", r_c, k_c, expdiff)
+        intra = jnp.einsum("bths,bshv->bthv", amat, v_c)
+        diag = jnp.einsum("bthk,hk,bthk->bth", r_c, u, k_c)
+        out = inter + intra + diag[..., None] * v_c
+        b_end = b[:, -1]                                   # [B,H,K]
+        k_scaled = k_c * jnp.exp(b_end[:, None] - b)
+        new_state = (state * jnp.exp(b_end)[..., None]
+                     + jnp.einsum("bchk,bchv->bhkv", k_scaled, v_c))
+        return new_state, out
+
+    def split(x):
+        return jnp.moveaxis(
+            x.reshape(bsz, nc, c, h, x.shape[-1]), 1, 0)
+
+    state0 = jnp.zeros((bsz, h, dk, dv), jnp.float32)
+    state, outs = jax.lax.scan(
+        chunk_step, state0, (split(r), split(k), split(v), split(ld)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(bsz, nc * c, h, dv)[:, :t]
+    if return_state:
+        return out, state
+    return out
+
+
+def rwkv6_ref(r, k, v, w, u):
+    """RWKV-6 (Finch) WKV recurrence, data-dependent decay — arXiv:2404.05892.
+
+    Shapes: r,k,w: [B, T, H, K]; v: [B, T, H, V]; u: [H, K].
+    state_t = diag(exp(-exp(w_t))) · state_{t-1} + k_tᵀ v_t
+    out_t   = r_t · (state_{t-1} + diag(u) k_tᵀ v_t)
+    Returns [B, T, H, V] (fp32).
+    """
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    b, t, h, dk = k.shape
+    dv = v.shape[-1]
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,K],[B,H,K],[B,H,V],[B,H,K]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        decay = jnp.exp(-jnp.exp(w_t))
+        state = state * decay[..., None] + kv
+        return state, out
+
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    xs = (
+        jnp.moveaxis(r, 1, 0),
+        jnp.moveaxis(k, 1, 0),
+        jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(w, 1, 0),
+    )
+    _, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1)  # [B, T, H, V]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Plain softmax attention with GQA head broadcasting.
+
+    q: [B, T, Hq, D]; k,v: [B, S, Hkv, D]; Hq % Hkv == 0.
+    """
+    b, tq, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bthd,bshd->bhts", q, kr) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((tq, s), bool), k=s - tq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", probs, vr).astype(q.dtype)

@@ -1,0 +1,300 @@
+"""Loop-aware HLO cost analysis (FLOPs / HBM bytes / collective bytes).
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE
+— a scan over 94 layers is undercounted 94× (verified empirically on this
+backend).  Roofline terms need the true per-device totals, so this module
+parses the compiled HLO text, recovers loop trip counts from the loop
+condition constants, and propagates call-graph multiplicities:
+
+* **flops**: 2·prod(result)·prod(contracting dims) per ``dot`` op
+  (MXU work; elementwise VPU flops are excluded — they are not the roofline
+  axis on TPU).
+* **hbm bytes**: Σ (result + operand bytes) over ops in *control*
+  computations (entry / loop bodies / branches), fusions counted at their
+  boundary — a standard post-fusion HBM-traffic proxy.
+* **collective bytes**: per-op wire bytes × loop multiplicity
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute), reduce-scatter scaled by its group size.
+
+All numbers are **per device** (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(.+?)\}(?:,|$| )")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+
+# HBM-traffic proxy op classes (see ``analyze``): counted operands+result.
+# _MAJOR = the perfectly-fused (TPU-realistic) set: matmuls, reductions and
+# real data movement; elementwise chains are assumed to stream through them.
+_TRAFFIC_MAJOR = {"dot", "convolution", "reduce", "reduce-window",
+                  "scatter", "gather", "sort", "cholesky",
+                  "triangular-solve", "rng"}
+# fusion boundaries: added for the mid estimate (CPU fusions are tiny, so
+# this approaches the unfused bound on this backend)
+_TRAFFIC_FUSION = {"fusion"}
+# data-movement ops: counted at result bytes ×2 (read + write)
+_TRAFFIC_MOVE = {"dynamic-slice", "dynamic-update-slice", "slice",
+                 "concatenate", "pad", "reverse", "transpose", "copy",
+                 "copy-start", "all-gather", "all-reduce", "reduce-scatter",
+                 "all-to-all", "collective-permute"}
+# standalone elementwise/convert/broadcast at top level: on TPU these fuse
+# into neighbours — excluded from the post-fusion estimate, included in the
+# pessimistic ``hbm_bytes_unfused`` bound.
+
+
+def _shapes_of(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    op: str
+    result_shapes: list
+    arg_names: list
+    raw: str
+
+
+def _parse_op(rhs: str) -> Tuple[str, list, list]:
+    """Split ``<result types> <opname>(<args>)<attrs>`` robustly."""
+    # find the op token: identifier directly followed by '(' that is not a
+    # type tuple — scan for `word(` occurrences, take the first whose word
+    # is not a dtype.
+    for m in re.finditer(r"([a-z][a-z0-9\-]*)\(", rhs):
+        word = m.group(1)
+        if word in _DTYPE_BYTES:
+            continue
+        head = rhs[: m.start()]
+        args_start = m.end()
+        depth = 1
+        i = args_start
+        while i < len(rhs) and depth:
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+            i += 1
+        args = rhs[args_start: i - 1]
+        arg_names = re.findall(r"%([\w.\-]+)", args)
+        return word, _shapes_of(head), arg_names
+    return "?", _shapes_of(rhs), []
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    order: List[str] = []
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                order.append(cur)
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op, res_shapes, arg_names = _parse_op(rhs)
+        comps[cur].append(Op(name, op, res_shapes, arg_names, rhs))
+    comps["__order__"] = order          # type: ignore
+    comps["__entry__"] = entry or (order[-1] if order else None)  # type: ignore
+    return comps
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Loop bound from the condition's comparison constant (jax scans count
+    0..N-1 step 1).  Falls back to 1 when unrecognizable."""
+    for op in cond_ops:
+        m = _CONST_RE.search(op.raw)
+        if m and int(m.group(1)) > 0:
+            return int(m.group(1))
+    return 1
+
+
+def _multiplicities(comps) -> Dict[str, float]:
+    order: List[str] = comps["__order__"]
+    entry: str = comps["__entry__"]
+    mult: Dict[str, float] = defaultdict(float)
+    fused: Dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    for cname in reversed(order):
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comps[cname]:
+            w = _WHILE_RE.search(op.raw)
+            if op.op == "while" and w:
+                cond, body = w.groups()
+                trip = _trip_count(comps.get(cond, []))
+                mult[body] += m * trip
+                mult[cond] += m * (trip + 1)
+                continue
+            br = _BRANCHES_RE.search(op.raw)
+            if br:
+                for b in re.findall(r"%?([\w.\-]+)", br.group(1)):
+                    if b in comps:
+                        mult[b] += m
+                continue
+            c = _CALLS_RE.search(op.raw)
+            if c and c.group(1) in comps:
+                mult[c.group(1)] += m
+                if op.op == "fusion":
+                    fused[c.group(1)] = True
+    mult["__fused__"] = fused  # type: ignore
+    return mult
+
+
+def _dot_flops(op: Op, symtab: Dict[str, list]) -> float:
+    if not op.result_shapes:
+        return 0.0
+    out_elems = 1
+    for d in op.result_shapes[0][1]:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.raw)
+    contracting = 1
+    if m and op.arg_names:
+        lhs_shapes = symtab.get(op.arg_names[0])
+        if lhs_shapes:
+            lhs = lhs_shapes[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(lhs):
+                    contracting *= lhs[idx]
+    return 2.0 * out_elems * contracting
+
+
+def _collective_wire_bytes(op: Op, symtab=None):
+    """(raw wire bytes, TPU-corrected wire bytes).
+
+    The CPU/GPU XLA pipeline *promotes* bf16 reductions to f32
+    (``to_apply=%add..._promoted``) and upcasts bf16 params before gathers
+    (producer fusions named ``convert...``); TPU collectives run native
+    bf16.  The corrected number halves exactly those promoted ops."""
+    nbytes = _nbytes(op.result_shapes)
+    if op.op.startswith("reduce-scatter"):
+        g = _GROUPS_IOTA_RE.search(op.raw)
+        if g:
+            nbytes *= int(g.group(2))
+        else:
+            g2 = _GROUPS_LIST_RE.search(op.raw)
+            if g2:
+                first = g2.group(1).split("}")[0]
+                nbytes *= max(1, len(first.split(",")))
+    corrected = nbytes
+    is_f32 = any(dt == "f32" for dt, _ in op.result_shapes)
+    if is_f32:
+        if "_promoted" in op.raw:
+            corrected = nbytes // 2
+        elif symtab is not None and op.arg_names:
+            producer = op.arg_names[0]
+            if "convert" in producer:
+                corrected = nbytes // 2
+    return nbytes, corrected
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    order: List[str] = comps["__order__"]
+    mult = _multiplicities(comps)
+    fused = mult.pop("__fused__")  # type: ignore
+
+    flops = 0.0
+    hbm_min = 0.0            # perfectly-fused estimate (roofline memory term)
+    hbm_fused = 0.0          # + fusion boundaries (CPU-fusion estimate)
+    hbm_unfused = 0.0        # pessimistic: every top-level op's result bytes
+
+    coll_bytes: Counter = Counter()
+    coll_corrected: Counter = Counter()
+    coll_counts: Counter = Counter()
+
+    for cname in order:
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {op.name: op.result_shapes for op in comps[cname]}
+        in_fusion = fused.get(cname, False)
+        for op in comps[cname]:
+            base = op.op.replace("-start", "")
+            if op.op.startswith("dot"):
+                flops += m * _dot_flops(op, symtab)
+            if base in COLLECTIVES and not op.op.endswith("-done"):
+                wb, wb_corr = _collective_wire_bytes(op, symtab)
+                coll_bytes[base] += int(m * wb)
+                coll_corrected[base] += int(m * wb_corr)
+                coll_counts[base] += int(m)
+            if in_fusion or op.op.endswith("-done") \
+                    or op.op in _SKIP_BYTES_OPS:
+                continue
+            res = _nbytes(op.result_shapes)
+            hbm_unfused += m * res
+            if base in _TRAFFIC_MAJOR or base in _TRAFFIC_FUSION:
+                nb = res
+                for a in op.arg_names:
+                    if a in symtab:
+                        nb += _nbytes(symtab[a])
+                hbm_fused += m * nb
+                if base in _TRAFFIC_MAJOR:
+                    hbm_min += m * nb
+            elif base in _TRAFFIC_MOVE:
+                hbm_min += m * 2 * res
+                hbm_fused += m * 2 * res
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_min,
+        "hbm_bytes_fused": hbm_fused,
+        "hbm_bytes_unfused": hbm_unfused,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_tpu": dict(coll_corrected),
+        "collective_counts": dict(coll_counts),
+        "collective_total_bytes": int(sum(coll_bytes.values())),
+        "collective_total_bytes_tpu": int(sum(coll_corrected.values())),
+        "n_computations": len(order),
+    }

@@ -1,0 +1,52 @@
+"""Serving driver: batched prefill + greedy decode with the Engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --reduced --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, reduced
+from ..models.api import get_model
+from ..serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params)
+
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+    embeds = None
+    if cfg.family == "vlm":
+        embeds = jnp.zeros((args.batch, cfg.frontend_positions, cfg.d_model))
+    if cfg.family == "encdec":
+        embeds = jnp.zeros((args.batch, args.prompt_len, cfg.d_model))
+    t0 = time.time()
+    out = engine.generate(prompt, args.max_new, embeds=embeds)
+    dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s); sample: {out[0][:8].tolist()}")
+    assert int(out.max()) < cfg.vocab
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Training driver: end-to-end loop with sharded data, WSD schedule,
+async checkpointing and exact-step restart.
+
+CPU-scale (reduced configs)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Production meshes use the same loop with ``make_production_mesh()`` and the
+per-arch sharding packages from :mod:`repro.launch.specs` (see dryrun.py for
+the compile-only path run in this container).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs import get_config, reduced
+from ..data.pipeline import SyntheticTokens
+from ..models.config import ModelConfig
+from ..train.step import TrainConfig, init_train_state, make_train_step
+
+
+def train_loop(cfg: ModelConfig, tc: TrainConfig, *, steps: int,
+               global_batch: int, seq_len: int, ckpt_dir: str | None,
+               ckpt_every: int = 20, log_every: int = 5, seed: int = 0):
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=seq_len,
+                           global_batch=global_batch, seed=seed)
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+
+    params, opt_state = init_train_state(cfg, tc, jax.random.PRNGKey(seed))
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        start = mgr.latest_step()
+        state = mgr.restore(start, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        print(f"[train] resumed from step {start}", flush=True)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in data.batch_np(step).items()}
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.numpy.zeros(
+                (global_batch, cfg.frontend_positions, cfg.d_model),
+                jax.numpy.float32)
+        if cfg.family == "encdec":
+            batch["embeds"] = jax.numpy.zeros(
+                (global_batch, seq_len, cfg.d_model), jax.numpy.float32)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['gnorm']):.3f} ({dt:.1f}s)",
+                  flush=True)
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save_async(step + 1, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.wait()
+        mgr.save(steps, {"params": params, "opt": opt_state})
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    tc = TrainConfig(peak_lr=args.lr, warmup=max(2, args.steps // 10),
+                     stable=args.steps, decay=max(2, args.steps // 10),
+                     seq_chunk=min(512, args.seq))
+    _, _, losses = train_loop(
+        cfg, tc, steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt_dir)
+    print(f"[train] first-loss {losses[0]:.4f} last-loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

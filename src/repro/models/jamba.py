@@ -1,0 +1,274 @@
+"""Jamba hybrid (Mamba + attention 1:7 interleave, MoE every other layer) —
+arXiv:2403.19887.
+
+Layer ``l`` uses attention iff ``l % attn_every == attn_offset`` (default
+1-in-8, middle of the block), Mamba otherwise; the FFN is MoE (16e top-2) on
+odd layers, dense SwiGLU on even.  Layers are heterogeneous so they run as a
+Python loop over per-layer param dicts (32 layers — bounded HLO), each block
+rematerialized.
+
+``long_500k`` decode is O(1) state for Mamba layers; the 4 attention layers
+use a *windowed* KV cache at long context (documented in DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ModelConfig
+from .layers import (
+    KVCache,
+    attention_chunked,
+    decode_attention,
+    gqa_project,
+    rms_norm,
+    swiglu,
+)
+from .moe import init_moe_params, moe_ffn
+from .ssm import init_ssm_params, init_states, mamba_block
+
+# attention layers cap their KV window at long context (128k) — the hybrid's
+# long-range memory lives in the Mamba states.
+ATTN_WINDOW = 131072
+
+
+def is_attn_layer(cfg: ModelConfig, l: int) -> bool:
+    return cfg.attn_every > 0 and l % cfg.attn_every == cfg.attn_offset
+
+
+def is_moe_layer(cfg: ModelConfig, l: int) -> bool:
+    return cfg.moe is not None and l % 2 == 1
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- init --
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    vp = cfg.padded_vocab()
+    keys = jax.random.split(key, cfg.n_layers + 2)
+
+    def mk(k, shape, scale_dim=d):
+        return (jax.random.normal(k, shape) * scale_dim ** -0.5).astype(dt)
+
+    layers: List[dict] = []
+    for l in range(cfg.n_layers):
+        ks = jax.random.split(keys[l], 8)
+        p = {"pre_norm": jnp.ones((d,), dt), "ffn_norm": jnp.ones((d,), dt)}
+        if is_attn_layer(cfg, l):
+            p.update({
+                "w_q": mk(ks[0], (d, cfg.n_heads * hd)),
+                "w_k": mk(ks[1], (d, cfg.n_kv_heads * hd)),
+                "w_v": mk(ks[2], (d, cfg.n_kv_heads * hd)),
+                "w_o": mk(ks[3], (cfg.n_heads * hd, d), cfg.n_heads * hd),
+            })
+        else:
+            p["mamba"] = init_ssm_params(ks[4], cfg, dt)
+        if is_moe_layer(cfg, l):
+            p.update(init_moe_params(ks[5], d, cfg.moe, dt))
+        else:
+            p.update({
+                "w1": mk(ks[5], (d, cfg.d_ff)),
+                "w3": mk(ks[6], (d, cfg.d_ff)),
+                "w2": mk(ks[7], (cfg.d_ff, d), cfg.d_ff),
+            })
+        layers.append(p)
+    return {
+        "embed": mk(keys[-2], (vp, d)),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": mk(keys[-1], (d, vp)),
+    }
+
+
+# ---------------------------------------------------------------- forward --
+def forward(cfg: ModelConfig, params, tokens, embeds=None):
+    x = params["embed"][tokens]
+    x = shard(x, "batch", None, "embed")
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    aux_total = jnp.float32(0.0)
+
+    for l, p in enumerate(params["layers"]):
+
+        def block(x, p=p, l=l):
+            aux = jnp.float32(0.0)
+            h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+            if is_attn_layer(cfg, l):
+                q, k, v = gqa_project(h, p, cfg, positions=positions)
+                attn = attention_chunked(q, k, v, causal=True)
+                mix = attn.reshape(b, t, -1) @ p["w_o"]
+            else:
+                mix, _, _ = mamba_block(cfg, h, p["mamba"])
+            x = x + shard(mix, "batch", None, "embed")
+            h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+            if is_moe_layer(cfg, l):
+                ffn, aux = moe_ffn(h, p, cfg.moe)
+            else:
+                ffn = swiglu(h, p["w1"], p["w3"], p["w2"])
+            return x + shard(ffn, "batch", None, "embed"), aux
+
+        blk = jax.checkpoint(block) if cfg.remat else block
+        x, aux = blk(x)
+        aux_total = aux_total + aux
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total / cfg.n_layers
+
+
+def prefill(cfg: ModelConfig, params, tokens, embeds=None):
+    """Serving prefill: last logits + hybrid cache (KV for attn layers,
+    conv/ssm states for Mamba layers)."""
+    x = params["embed"][tokens]
+    x = shard(x, "batch", None, "embed")
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    kv, conv, ssm = [], [], []
+    for l, p in enumerate(params["layers"]):
+
+        def block(x, p=p, l=l):
+            h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+            if is_attn_layer(cfg, l):
+                q, k, v = gqa_project(h, p, cfg, positions=positions)
+                attn = attention_chunked(q, k, v, causal=True)
+                mix = attn.reshape(b, t, -1) @ p["w_o"]
+                state = (k, v, None, None)
+            else:
+                mix, nc, ns = mamba_block(cfg, h, p["mamba"])
+                state = (None, None, nc, ns)
+            x = x + shard(mix, "batch", None, "embed")
+            h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+            if is_moe_layer(cfg, l):
+                ffn, _ = moe_ffn(h, p, cfg.moe)
+            else:
+                ffn = swiglu(h, p["w1"], p["w3"], p["w2"])
+            return x + shard(ffn, "batch", None, "embed"), state
+
+        blk = jax.checkpoint(block) if cfg.remat else block
+        x, (k, v, nc, ns) = blk(x)
+        if k is not None:
+            kv.append(KVCache(k=k, v=v, length=jnp.full((), t, jnp.int32)))
+            conv.append(None)
+            ssm.append(None)
+        else:
+            kv.append(None)
+            conv.append(nc)
+            ssm.append(ns)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    return logits, JambaCache(kv=kv, conv=conv, ssm=ssm,
+                              length=jnp.full((), t, jnp.int32))
+
+
+def logits_fn(cfg, params, hidden):
+    out = hidden @ params["lm_head"].astype(hidden.dtype)
+    vp = out.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab ids
+        out = jnp.where(jnp.arange(vp) < cfg.vocab, out,
+                        jnp.asarray(-1e30, out.dtype))
+    return shard(out, "batch", None, "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets, *, seq_chunk=512,
+            embeds=None):
+    hidden, aux = forward(cfg, params, tokens)
+    # gather seq shards before loss chunking (scan can't iterate a
+    # sharded axis); the lm_head matmul stays vocab-TP
+    hidden = shard(hidden, "batch", None, "embed")
+    b, t, d = hidden.shape
+    chunk = min(seq_chunk, t)
+    n = t // chunk
+    hc = jnp.moveaxis(hidden[:, : n * chunk].reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets[:, : n * chunk].reshape(b, n, chunk), 1, 0)
+
+    def one(args):
+        hx, tx = args
+        lg = logits_fn(cfg, params, hx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, tx[..., None], axis=-1)[..., 0]
+        return (lse - picked).mean()
+
+    return jax.lax.map(jax.checkpoint(one), (hc, tc)).mean() + 0.01 * aux
+
+
+# ----------------------------------------------------------------- decode --
+@dataclasses.dataclass
+class JambaCache:
+    kv: List[Optional[KVCache]]          # per attn layer
+    conv: List[Optional[jax.Array]]      # per mamba layer
+    ssm: List[Optional[jax.Array]]
+    length: jax.Array
+
+
+def _jamba_cache_flatten(c):
+    return ((c.kv, c.conv, c.ssm, c.length), None)
+
+
+def _jamba_cache_unflatten(_, children):
+    return JambaCache(*children)
+
+
+jax.tree_util.register_pytree_node(
+    JambaCache, _jamba_cache_flatten, _jamba_cache_unflatten)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> JambaCache:
+    dt = _dtype(cfg)
+    window = min(max_len, ATTN_WINDOW)
+    kv, conv, ssm = [], [], []
+    for l in range(cfg.n_layers):
+        if is_attn_layer(cfg, l):
+            kv.append(KVCache.init(batch, window, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim, dt))
+            conv.append(None)
+            ssm.append(None)
+        else:
+            c, s = init_states(cfg, batch)
+            kv.append(None)
+            conv.append(c)
+            ssm.append(s)
+    return JambaCache(kv=kv, conv=conv, ssm=ssm,
+                      length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, cache: JambaCache, token, pos):
+    x = params["embed"][token]
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    new_kv, new_conv, new_ssm = [], [], []
+    for l, p in enumerate(params["layers"]):
+        h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+        if is_attn_layer(cfg, l):
+            q, k_new, v_new = gqa_project(h, p, cfg, positions=positions)
+            lc = cache.kv[l]
+            win = lc.k.shape[1]
+            slot = jnp.minimum(pos, win - 1)  # windowed KV at long context
+            attn, nlc = decode_attention(q, lc, k_new, v_new, pos=slot)
+            mix = attn.reshape(b, 1, -1) @ p["w_o"]
+            new_kv.append(nlc)
+            new_conv.append(None)
+            new_ssm.append(None)
+        else:
+            mix, nc, ns = mamba_block(
+                cfg, h, p["mamba"], conv_state=cache.conv[l],
+                ssm_state=cache.ssm[l], decode=True)
+            new_kv.append(None)
+            new_conv.append(nc)
+            new_ssm.append(ns)
+        x = x + mix
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if is_moe_layer(cfg, l):
+            ffn, _ = moe_ffn(h, p, cfg.moe)
+        else:
+            ffn = swiglu(h, p["w1"], p["w3"], p["w2"])
+        x = x + ffn
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_fn(cfg, params, x), JambaCache(
+        kv=new_kv, conv=new_conv, ssm=new_ssm, length=cache.length + 1)

@@ -1,0 +1,218 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention
+(direct / XLA-chunked-flash / decode-with-cache), SwiGLU MLP.
+
+Everything is functional: ``params`` are plain dict pytrees, layers take and
+return arrays.  Activation sharding happens through logical-axis annotations
+(:func:`repro.parallel.sharding.shard`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, T, H, D]; positions: [B, T] (absolute)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention --
+def _gqa_repeat(k, group: int):
+    return jnp.repeat(k, group, axis=2) if group > 1 else k
+
+
+def attention_direct(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Materialized-logits attention (small T or decode); logits stay
+    KV-sequence-sharded under the seq_kv rule."""
+    b, tq, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    kr, vr = _gqa_repeat(k, hq // hkv), _gqa_repeat(v, hq // hkv)
+    logits = jnp.einsum("bthd,bshd->bhts", q, kr) / jnp.sqrt(d).astype(q.dtype)
+    logits = shard(logits.astype(jnp.float32), "batch", None, None, "seq_kv")
+    if causal:
+        q_pos = q_offset + jnp.arange(tq)[:, None]
+        k_pos = jnp.arange(s)[None, :]
+        logits = jnp.where((q_pos >= k_pos)[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = shard(probs, "batch", None, None, "seq_kv")
+    return jnp.einsum("bhts,bshd->bthd", probs.astype(q.dtype), vr)
+
+
+def attention_chunked(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 2048):
+    """Online-softmax attention expressed in XLA scans — the memory-safe path
+    for 32k prefill on the dry-run (the Pallas flash kernel is the TPU
+    runtime path; this is its lowering-friendly twin with identical math).
+
+    Under sequence parallelism the q axis is sharded across devices, and a
+    scan cannot iterate a sharded axis — the ``attn_q_chunk`` rule flips to
+    full-T (one q chunk, kv scan only) so the q dim stays sharded."""
+    from ..parallel.sharding import get_rule
+
+    q_chunk = int(get_rule("attn_q_chunk", q_chunk) or q_chunk)
+    kv_chunk = int(get_rule("attn_kv_chunk", kv_chunk) or kv_chunk)
+    b, tq, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, s)
+    tq_orig, s_orig = tq, s
+    pq, pk = (-tq) % q_chunk, (-s) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        tq += pq
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        s += pk
+    nq, nk = tq // q_chunk, s // kv_chunk
+    scale = 1.0 / (d ** 0.5)
+
+    kc = k.reshape(b, nk, kv_chunk, hkv, d)
+    vc = v.reshape(b, nk, kv_chunk, hkv, d)
+
+    def q_step(_, qi):
+        qblk, iq = qi                                  # [B, qc, Hq, D]
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, ik = ki
+            kr = _gqa_repeat(kblk, group)
+            vr = _gqa_repeat(vblk, group)
+            sblk = jnp.einsum("bthd,bshd->bhts", qblk, kr) * scale
+            sblk = sblk.astype(jnp.float32)
+            k_pos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            if causal:
+                q_pos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+                sblk = jnp.where((q_pos >= k_pos)[None, None], sblk, NEG_INF)
+            if s != s_orig:  # mask padded kv positions (non-causal path)
+                sblk = jnp.where((k_pos < s_orig)[None, None], sblk, NEG_INF)
+            m_new = jnp.maximum(m, sblk.max(-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bhts,bshd->bhtd",
+                                p.astype(qblk.dtype), vr).astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, hq, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(qblk.dtype)           # [B, Hq, qc, D]
+
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, hq, d), 1, 0)
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1)                    # [B, nq, Hq, qc, D]
+    out = out.transpose(0, 1, 3, 2, 4).reshape(b, tq, hq, d)
+    return out[:, :tq_orig]
+
+
+# --------------------------------------------------------------- KV cache --
+@dataclasses.dataclass
+class KVCache:
+    """Static-shape ring-less cache: [L?, B, S_max, Hkv, D] + scalar length."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # int32 scalar
+
+    @staticmethod
+    def init(batch: int, max_len: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16):
+        shape = (batch, max_len, n_kv, head_dim)
+        return KVCache(
+            k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+            length=jnp.zeros((), jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "length"], meta_fields=[])
+
+
+def decode_attention(q, cache: KVCache, k_new, v_new, *, pos):
+    """One-token decode: append to cache, attend over the valid prefix.
+
+    q: [B, 1, Hq, D]; k_new/v_new: [B, 1, Hkv, D]; pos: [] int32.
+    """
+    b, _, hq, d = q.shape
+    hkv = k_new.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)  # match pos dtype even under x64
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (zero, pos, zero, zero))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (zero, pos, zero, zero))
+    # under KV-sequence sharding (kv_heads ∤ TP axis) pin the whole decode
+    # attention to stay S-sharded: logits/softmax partials shard over S and
+    # only the tiny [B,H,1,D] output is all-reduced (else XLA re-gathers
+    # the full cache per layer — see EXPERIMENTS.md §Perf)
+    k = shard(k, "batch", "seq_kv", "kv_heads", None)
+    v = shard(v, "batch", "seq_kv", "kv_heads", None)
+    kr, vr = _gqa_repeat(k, hq // hkv), _gqa_repeat(v, hq // hkv)
+    logits = jnp.einsum("bthd,bshd->bhts", q, kr) / jnp.sqrt(d).astype(q.dtype)
+    logits = logits.astype(jnp.float32)
+    logits = shard(logits, "batch", None, None, "seq_kv")
+    valid = jnp.arange(k.shape[1])[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = shard(probs, "batch", None, None, "seq_kv")
+    out = jnp.einsum("bhts,bshd->bthd", probs, vr)
+    new_cache = KVCache(k=k, v=v, length=cache.length + 1)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ MLPs --
+def swiglu(x, w1, w3, w2):
+    """SwiGLU FFN; w1,w3: [D, F], w2: [F, D]."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ w2
+
+
+def gqa_project(x, p, cfg, *, positions=None):
+    """QKV projection + RoPE; returns q,k,v in [B, T, H, D] layout."""
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["w_q"]).reshape(b, t, cfg.n_heads, hd)
+    k = (x @ p["w_k"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = (x @ p["w_v"]).reshape(b, t, cfg.n_kv_heads, hd)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # "seq" maps to the TP axis under sequence parallelism (archs whose head
+    # count doesn't divide the axis — see specs.build_cell); None otherwise.
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v

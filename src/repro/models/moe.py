@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity dispatch (EP over TP
+axis), computed per sequence chunk so the one-hot dispatch tensor stays
+VMEM/HBM-friendly at 32k context (Switch/MaxText "dropping" formulation).
+
+Params: router: [D, E]; moe_w1/moe_w3: [E, D, F]; moe_w2: [E, F, D].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import MoEConfig
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(x, params, cfg: MoEConfig):
+    """x: [B, T, D] -> [B, T, D]  (+ aux load-balance loss as second output)."""
+    b, t, d = x.shape
+    chunk = min(cfg.router_chunk, t)
+    while t % chunk:  # largest divisor of t not exceeding router_chunk
+        chunk -= 1
+    n_chunks = t // chunk
+
+    def one_chunk(xc):
+        # xc: [B, C_tokens, D]
+        logits = xc @ params["router"]                       # [B, Tc, E]
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)  # [B, Tc, k]
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        cap = _capacity(chunk, cfg)
+        # position of each (token, k) within its expert's capacity buffer
+        onehot = jax.nn.one_hot(gate_idx, cfg.n_experts,
+                                dtype=jnp.int32)             # [B, Tc, k, E]
+        flat = onehot.reshape(xc.shape[0], -1, cfg.n_experts)
+        pos_in_expert = jnp.cumsum(flat, axis=1) * flat      # [B, Tc*k, E]
+        pos_in_expert = pos_in_expert.reshape(
+            xc.shape[0], chunk, cfg.top_k, cfg.n_experts) - 1
+        keep = (pos_in_expert < cap) & (onehot > 0)
+        # dispatch: [B, Tc, E, cap]
+        cap_onehot = jax.nn.one_hot(
+            jnp.where(keep, pos_in_expert, -1), cap,
+            dtype=xc.dtype)                                  # [B,Tc,k,E,cap]
+        dispatch = cap_onehot.sum(2)                         # [B, Tc, E, cap]
+        combine = (cap_onehot
+                   * gate_vals.astype(xc.dtype)[..., None, None]).sum(2)
+        dispatch = shard(dispatch, "batch", None, "experts", None)
+        expert_in = jnp.einsum("btec,btd->becd", dispatch, xc)
+        expert_in = shard(expert_in, "batch", "experts", None, None)
+        h = (jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in,
+                                    params["moe_w1"]))
+             * jnp.einsum("becd,edf->becf", expert_in, params["moe_w3"]))
+        h = shard(h, "batch", "experts", None, None)
+        expert_out = jnp.einsum("becf,efd->becd", h, params["moe_w2"])
+        out = jnp.einsum("btec,becd->btd", combine, expert_out)
+        # aux loss: mean fraction routed vs mean router prob (Switch eq. 4)
+        me = probs.mean(axis=(0, 1))                         # [E]
+        ce = onehot.astype(jnp.float32).mean(axis=(0, 1, 2))
+        aux = cfg.n_experts * jnp.sum(me * ce)
+        return out, aux
+
+    if n_chunks == 1:
+        return one_chunk(x)
+    xs = jnp.moveaxis(x.reshape(b, n_chunks, chunk, d), 1, 0)
+    outs, auxs = jax.lax.map(one_chunk, xs)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, t, d), auxs.mean()
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = d_model ** -0.5
+    scale_out = cfg.d_ff_expert ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (d_model, cfg.n_experts))
+                   * scale_in).astype(dtype),
+        "moe_w1": (jax.random.normal(
+            k2, (cfg.n_experts, d_model, cfg.d_ff_expert))
+            * scale_in).astype(dtype),
+        "moe_w3": (jax.random.normal(
+            k3, (cfg.n_experts, d_model, cfg.d_ff_expert))
+            * scale_in).astype(dtype),
+        "moe_w2": (jax.random.normal(
+            k4, (cfg.n_experts, cfg.d_ff_expert, d_model))
+            * scale_out).astype(dtype),
+    }

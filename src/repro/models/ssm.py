@@ -1,0 +1,147 @@
+"""Selective SSM (Mamba) block for the Jamba hybrid — arXiv:2403.19887.
+
+Recurrence (diagonal A):  h_t = exp(Δ_t A)·h_{t-1} + Δ_t B_t x_t,
+y_t = C_t·h_t + D·x_t, gated by silu(z).  Train/prefill uses a *chunked
+associative scan* (parallel inside a chunk, sequential across chunks) —
+O(T log C) depth, bounded memory, lowers to a clean XLA while-loop; decode
+carries (conv window, ssm state): O(1) per token — the jamba ``long_500k``
+path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ModelConfig, SSMConfig
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return (cfg.ssm or SSMConfig()).expand * cfg.d_model
+
+
+def init_ssm_params(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    di = d_inner(cfg)
+    ks = jax.random.split(key, 8)
+
+    def mk(k, shape, scale_dim=d):
+        return (jax.random.normal(k, shape) * scale_dim ** -0.5).astype(dtype)
+
+    return {
+        "in_proj": mk(ks[0], (d, 2 * di)),
+        "conv_w": mk(ks[1], (s.d_conv, di), s.d_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_bc": mk(ks[2], (di, 2 * s.d_state), di),
+        "x_dt": mk(ks[3], (di, 1), di),
+        "dt_bias": jnp.full((di,), -4.0, dtype),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state))
+        ).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": mk(ks[4], (di, d), di),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d. x: [B, T, Di]; w: [K, Di]; state: [B,K-1,Di]."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return out, new_state
+
+
+def _selective_scan_chunked(u, dt, a, b_t, c_t, chunk: int,
+                            return_state: bool = False):
+    """u: [B, T, Di]; dt: [B, T, Di]; a: [Di, N]; b_t, c_t: [B, T, N].
+
+    Returns y [B, T, Di] (fp32 internally) [, final state [B, Di, N]]."""
+    bsz, t, di = u.shape
+    n = a.shape[-1]
+    chunk = min(chunk, t)
+    t_orig = t
+    pad = (-t) % chunk
+    if pad:
+        # dt=0 padding: decay=1, increment=0 — state passes through untouched
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // chunk
+
+    def assoc(e1, e2):
+        a1, x1 = e1
+        a2, x2 = e2
+        return a1 * a2, x2 + a2 * x1
+
+    def chunk_step(h0, xs):
+        # decay/increment materialize PER CHUNK only ([B,C,Di,N]) — building
+        # them for the full T first costs T/chunk × the memory (§Perf)
+        uc, dtc, btc, cc = xs
+        uc, dtc = uc.astype(jnp.float32), dtc.astype(jnp.float32)
+        btc, cc = btc.astype(jnp.float32), cc.astype(jnp.float32)
+        dc = jnp.exp(dtc[..., None] * a[None, None])          # [B,C,Di,N]
+        ic = (dtc * uc)[..., None] * btc[:, :, None, :]
+        # prefix-scan inside the chunk, seeded by h0 via the first element
+        ic0 = ic.at[:, 0].add(dc[:, 0] * h0)
+        acc_a, acc_x = jax.lax.associative_scan(
+            assoc, (dc, ic0), axis=1)
+        y = jnp.einsum("bcdn,bcn->bcd", acc_x, cc)
+        return acc_x[:, -1], y
+
+    def split(x):
+        return jnp.moveaxis(
+            x.reshape(bsz, nc, chunk, *x.shape[2:]), 1, 0)
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0, (split(u), split(dt), split(b_t), split(c_t)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, t, di)[:, :t_orig]
+    if return_state:
+        return y, h_final
+    return y
+
+
+def mamba_block(cfg: ModelConfig, x, p, *, conv_state=None, ssm_state=None,
+                decode: bool = False):
+    """x: [B, T, D] -> (out, new_conv_state, new_ssm_state)."""
+    s = cfg.ssm or SSMConfig()
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard(xi, "batch", None, "ffn")
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    bc = xi @ p["x_bc"]
+    b_t, c_t = jnp.split(bc, 2, axis=-1)                      # [B,T,N] each
+    dt = jax.nn.softplus(xi @ p["x_dt"] + p["dt_bias"])       # [B,T,Di]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [Di,N]
+
+    if decode:
+        # one step: h = exp(dt·a)·h + dt·b·u
+        assert ssm_state is not None
+        u1, dt1, b1, c1 = xi[:, 0], dt[:, 0], b_t[:, 0], c_t[:, 0]
+        decay = jnp.exp(dt1[..., None].astype(jnp.float32) * a[None])
+        inc = (dt1 * u1)[..., None].astype(jnp.float32) * \
+            b1[:, None, :].astype(jnp.float32)
+        h = ssm_state * decay + inc                           # [B,Di,N]
+        y = jnp.einsum("bdn,bn->bd", h, c1.astype(jnp.float32))[:, None]
+        new_ssm = h
+    else:
+        y, new_ssm = _selective_scan_chunked(
+            xi, dt, a, b_t, c_t, s.chunk, return_state=True)
+    y = (y + (xi * p["d_skip"]).astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], new_conv, new_ssm
+
+
+def init_states(cfg: ModelConfig, batch: int):
+    s = cfg.ssm or SSMConfig()
+    di = d_inner(cfg)
+    conv = jnp.zeros((batch, s.d_conv - 1, di), jnp.dtype(cfg.dtype))
+    ssm = jnp.zeros((batch, di, s.d_state), jnp.float32)
+    return conv, ssm

@@ -1,0 +1,235 @@
+"""Decoder-only LM (dense GQA / MoE / VLM-backbone families).
+
+Layers run under ``jax.lax.scan`` over stacked parameters (bounded HLO and
+compile time at 94 layers), each step optionally rematerialized.  Attention
+uses the XLA online-softmax chunked path for train/prefill (the Pallas flash
+kernel is the TPU runtime twin) and a static-shape KV-cache path for decode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ModelConfig
+from .layers import (
+    KVCache,
+    attention_chunked,
+    decode_attention,
+    gqa_project,
+    rms_norm,
+    swiglu,
+)
+from .moe import init_moe_params, moe_ffn
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- init --
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    vp = cfg.padded_vocab()
+    keys = jax.random.split(key, 12)
+    init = jax.nn.initializers.normal(d ** -0.5)
+
+    def mk(k, shape, scale_dim=None):
+        s = (scale_dim or d) ** -0.5
+        return (jax.random.normal(k, shape) * s).astype(dt)
+
+    L = cfg.n_layers
+    layers = {
+        "attn_norm": jnp.ones((L, d), dt),
+        "w_q": mk(keys[0], (L, d, cfg.n_heads * hd)),
+        "w_k": mk(keys[1], (L, d, cfg.n_kv_heads * hd)),
+        "w_v": mk(keys[2], (L, d, cfg.n_kv_heads * hd)),
+        "w_o": mk(keys[3], (L, cfg.n_heads * hd, d), cfg.n_heads * hd),
+        "ffn_norm": jnp.ones((L, d), dt),
+    }
+    if cfg.moe is not None:
+        moe_keys = jax.random.split(keys[4], L)
+        stacked = jax.vmap(
+            lambda k: init_moe_params(k, d, cfg.moe, dt))(moe_keys)
+        layers.update(stacked)
+    else:
+        layers.update({
+            "w1": mk(keys[5], (L, d, cfg.d_ff)),
+            "w3": mk(keys[6], (L, d, cfg.d_ff)),
+            "w2": mk(keys[7], (L, cfg.d_ff, d), cfg.d_ff),
+        })
+    params = {
+        "embed": mk(keys[8], (vp, d)),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = mk(keys[9], (d, vp))
+    return params
+
+
+# ---------------------------------------------------------------- forward --
+def _layer(cfg: ModelConfig, x, p, positions, collect_kv: bool = False):
+    """One transformer block (train/prefill path)."""
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = gqa_project(h, p, cfg, positions=positions)
+    attn = attention_chunked(q, k, v, causal=True)
+    b, t, _, _ = attn.shape
+    attn = attn.reshape(b, t, -1) @ p["w_o"]
+    x = x + shard(attn, "batch", "seq", "embed")
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        ffn, aux = moe_ffn(h, p, cfg.moe)
+    else:
+        ffn, aux = swiglu(h, p["w1"], p["w3"], p["w2"]), 0.0
+    x = x + shard(ffn, "batch", "seq", "embed")
+    kv = (k, v) if collect_kv else None
+    return x, jnp.asarray(aux, jnp.float32), kv
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            embeds: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """tokens: [B, T_text] int32; embeds: [B, T_front, D] (vlm/audio stub).
+
+    Returns (hidden [B, T, D], aux loss scalar)."""
+    x = params["embed"][tokens]                       # [B, T_text, D]
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, _ = _layer(cfg, x, lp, positions)
+        return (x, aux + a), None
+
+    step = jax.checkpoint(body) if cfg.remat else body
+    carry = (x, jnp.float32(0.0))
+    k = cfg.remat_block
+    if cfg.remat and k > 1:
+        L = cfg.n_layers
+        l1 = (L // k) * k
+        main = jax.tree.map(
+            lambda a: a[:l1].reshape(l1 // k, k, *a.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda a: a[l1:], params["layers"])
+
+        def block(carry, bp):
+            out, _ = jax.lax.scan(step, carry, bp)
+            return out, None
+
+        carry, _ = jax.lax.scan(jax.checkpoint(block), carry, main)
+        if l1 < L:
+            carry, _ = jax.lax.scan(step, carry, tail)
+    else:
+        carry, _ = jax.lax.scan(step, carry, params["layers"])
+    x, aux = carry
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / cfg.n_layers
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            embeds: Optional[jax.Array] = None):
+    """Serving prefill: last-position logits + a filled KV cache [L,B,T,H,D]."""
+    x = params["embed"][tokens]
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, kv = _layer(cfg, x, lp, positions, collect_kv=True)
+        return (x, aux + a), kv
+
+    step = jax.checkpoint(body) if cfg.remat else body
+    (x, _), (ks, vs) = jax.lax.scan(
+        step, (x, jnp.float32(0.0)), params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    cache = KVCache(k=ks, v=vs, length=jnp.full((), t, jnp.int32))
+    return logits, cache
+
+
+def logits_fn(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    out = hidden @ head.astype(hidden.dtype)
+    vp = out.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab ids
+        out = jnp.where(jnp.arange(vp) < cfg.vocab, out,
+                        jnp.asarray(-1e30, out.dtype))
+    return shard(out, "batch", None, "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens, targets,
+            *, seq_chunk: int = 512, embeds=None):
+    """Next-token cross entropy, vocab-sharded, sequence-chunked softmax."""
+    hidden, aux = forward(cfg, params, tokens, embeds=embeds)
+    # gather seq shards before loss chunking (scan can't iterate a
+    # sharded axis); the lm_head matmul stays vocab-TP
+    hidden = shard(hidden, "batch", None, "embed")
+    b, t, d = hidden.shape
+    # frontends prepend positions without labels
+    if targets.shape[1] != t:
+        hidden = hidden[:, t - targets.shape[1]:]
+        t = targets.shape[1]
+    chunk = min(seq_chunk, t)
+    n = t // chunk
+    hc = jnp.moveaxis(hidden[:, : n * chunk].reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets[:, : n * chunk].reshape(b, n, chunk), 1, 0)
+
+    def one(hx, tx):
+        lg = logits_fn(cfg, params, hx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, tx[..., None], axis=-1)[..., 0]
+        return (lse - picked).mean()
+
+    losses = jax.lax.map(jax.checkpoint(lambda args: one(*args)), (hc, tc))
+    return losses.mean() + 0.01 * aux
+
+
+# ----------------------------------------------------------------- decode --
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    """Stacked [L, B, S, Hkv, hd] cache."""
+    dt = _dtype(cfg)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: KVCache,
+                token: jax.Array, pos: jax.Array):
+    """One decode step. token: [B, 1] int32; pos: [] int32.
+
+    Returns (logits [B, 1, Vp], new cache)."""
+    x = params["embed"][token]
+    x = shard(x, "batch", None, "embed")
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = gqa_project(h, lp, cfg, positions=positions)
+        lc = KVCache(k=kc, v=vc, length=cache.length)
+        attn, new_lc = decode_attention(q, lc, k_new, v_new, pos=pos)
+        attn = attn.reshape(b, 1, -1) @ lp["w_o"]
+        x = x + attn
+        h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            ffn, _ = moe_ffn(h, lp, cfg.moe)
+        else:
+            ffn = swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+        return x + ffn, (new_lc.k, new_lc.v)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache.k, cache.v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x)
+    return logits, KVCache(k=new_k, v=new_v, length=cache.length + 1)

@@ -1,0 +1,290 @@
+"""Whisper-small encoder–decoder backbone — arXiv:2212.04356.
+
+The audio frontend (two 1-D convs with stride-2 downsampling over
+log-mel frames) is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings [B, T_frames, D].  Encoder = bidirectional
+self-attn; decoder = causal self-attn + cross-attn to encoder output.
+LayerNorm (with bias) as in the paper; sinusoidal positions on the encoder,
+learned positions on the decoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ModelConfig
+from .layers import KVCache, attention_chunked, decode_attention
+
+MAX_DEC_POS = 1 << 16
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def layer_norm(x, scale, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def sinusoids(length: int, d: int):
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(length)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------------- init --
+def _attn_params(mk, ks, d, h, hd, prefix=""):
+    return {
+        f"{prefix}w_q": mk(ks[0], (d, h * hd)),
+        f"{prefix}w_k": mk(ks[1], (d, h * hd)),
+        f"{prefix}w_v": mk(ks[2], (d, h * hd)),
+        f"{prefix}w_o": mk(ks[3], (h * hd, d), h * hd),
+    }
+
+
+def _mlp_params(mk, ks, d, f):
+    return {"w1": mk(ks[0], (d, f)), "w2": mk(ks[1], (f, d), f)}
+
+
+def _norm(d, dt):
+    return {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h = cfg.n_heads
+    vp = cfg.padded_vocab()
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    keys = jax.random.split(key, n_enc + cfg.n_layers + 3)
+
+    def mk(k, shape, scale_dim=d):
+        return (jax.random.normal(k, shape) * scale_dim ** -0.5).astype(dt)
+
+    enc_layers = []
+    for l in range(n_enc):
+        ks = jax.random.split(keys[l], 8)
+        enc_layers.append({
+            "norm1": _norm(d, dt), "norm2": _norm(d, dt),
+            **_attn_params(mk, ks[:4], d, h, hd),
+            **_mlp_params(mk, ks[4:6], d, cfg.d_ff),
+        })
+    dec_layers = []
+    for l in range(cfg.n_layers):
+        ks = jax.random.split(keys[n_enc + l], 12)
+        dec_layers.append({
+            "norm1": _norm(d, dt), "norm2": _norm(d, dt),
+            "norm3": _norm(d, dt),
+            **_attn_params(mk, ks[:4], d, h, hd),
+            **{f"x_{k}": v for k, v in
+               _attn_params(mk, ks[4:8], d, h, hd).items()},
+            **_mlp_params(mk, ks[8:10], d, cfg.d_ff),
+        })
+    return {
+        "embed": mk(keys[-3], (vp, d)),
+        "dec_pos": mk(keys[-2], (MAX_DEC_POS, d)),
+        "enc_layers": enc_layers,
+        "dec_layers": dec_layers,
+        "enc_norm": _norm(d, dt),
+        "dec_norm": _norm(d, dt),
+    }
+
+
+# ------------------------------------------------------------- components --
+def _mha(cfg, x, p, kv=None, *, causal, prefix="", direct=False):
+    b, t, d = x.shape
+    hd = cfg.resolved_head_dim
+    src = x if kv is None else kv
+    q = (x @ p[f"{prefix}w_q"]).reshape(b, t, cfg.n_heads, hd)
+    k = (src @ p[f"{prefix}w_k"]).reshape(b, src.shape[1], cfg.n_heads, hd)
+    v = (src @ p[f"{prefix}w_v"]).reshape(b, src.shape[1], cfg.n_heads, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq_kv", "heads", None)
+    v = shard(v, "batch", "seq_kv", "heads", None)
+    if direct:
+        # decode cross-attn: [B,1,S] logits stay KV-sequence-sharded; a
+        # kv-chunk scan cannot iterate a sharded axis (§Perf)
+        from .layers import attention_direct
+
+        out = attention_direct(q, k, v, causal=causal)
+    else:
+        out = attention_chunked(q, k, v, causal=causal)
+    return out.reshape(b, t, -1) @ p[f"{prefix}w_o"]
+
+
+def _mlp(x, p):
+    h = jax.nn.gelu(x @ p["w1"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ p["w2"]
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: [B, T_frames, D] (frontend stub output) -> [B, T, D]."""
+    x = frames + sinusoids(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    eps = cfg.norm_eps
+    for p in params["enc_layers"]:
+        def block(x, p=p):
+            h = layer_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], eps)
+            x = x + _mha(cfg, h, p, causal=False)
+            h = layer_norm(x, p["norm2"]["scale"], p["norm2"]["bias"], eps)
+            return x + _mlp(h, p)
+        x = (jax.checkpoint(block) if cfg.remat else block)(x)
+    return layer_norm(x, params["enc_norm"]["scale"],
+                      params["enc_norm"]["bias"], eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out):
+    eps = cfg.norm_eps
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][:t][None].astype(
+        _dtype(cfg))
+    x = shard(x, "batch", "seq", "embed")
+    for p in params["dec_layers"]:
+        def block(x, p=p):
+            h = layer_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], eps)
+            x = x + _mha(cfg, h, p, causal=True)
+            h = layer_norm(x, p["norm2"]["scale"], p["norm2"]["bias"], eps)
+            x = x + _mha(cfg, h, p, kv=enc_out, causal=False, prefix="x_")
+            h = layer_norm(x, p["norm3"]["scale"], p["norm3"]["bias"], eps)
+            return x + _mlp(h, p)
+        x = (jax.checkpoint(block) if cfg.remat else block)(x)
+    return layer_norm(x, params["dec_norm"]["scale"],
+                      params["dec_norm"]["bias"], eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, embeds=None):
+    """embeds = encoder frames (stub).  Returns (hidden, aux)."""
+    assert embeds is not None, "whisper needs frame embeddings"
+    enc = encode(cfg, params, embeds)
+    hid = decode_train(cfg, params, tokens, enc)
+    return hid, jnp.float32(0.0)
+
+
+def logits_fn(cfg, params, hidden):
+    out = hidden @ params["embed"].T.astype(hidden.dtype)  # tied head
+    vp = out.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab ids
+        out = jnp.where(jnp.arange(vp) < cfg.vocab, out,
+                        jnp.asarray(-1e30, out.dtype))
+    return shard(out, "batch", None, "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets, *, seq_chunk=512,
+            embeds=None):
+    hidden, _ = forward(cfg, params, tokens, embeds=embeds)
+    # gather seq shards before loss chunking (scan can't iterate a
+    # sharded axis); the lm_head matmul stays vocab-TP
+    hidden = shard(hidden, "batch", None, "embed")
+    b, t, d = hidden.shape
+    chunk = min(seq_chunk, t)
+    n = t // chunk
+    hc = jnp.moveaxis(hidden[:, : n * chunk].reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets[:, : n * chunk].reshape(b, n, chunk), 1, 0)
+
+    def one(args):
+        hx, tx = args
+        lg = logits_fn(cfg, params, hx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, tx[..., None], axis=-1)[..., 0]
+        return (lse - picked).mean()
+
+    return jax.lax.map(jax.checkpoint(one), (hc, tc)).mean()
+
+
+def prefill(cfg: ModelConfig, params, tokens, embeds=None):
+    """Serving prefill: encode audio frames, run the decoder prompt, return
+    last logits + (decoder self-KV, encoder output) cache."""
+    assert embeds is not None
+    eps = cfg.norm_eps
+    enc = encode(cfg, params, embeds)
+    b, t = tokens.shape
+    hd = cfg.resolved_head_dim
+    x = params["embed"][tokens] + params["dec_pos"][:t][None].astype(
+        _dtype(cfg))
+    x = shard(x, "batch", "seq", "embed")
+    self_kv = []
+    for p in params["dec_layers"]:
+
+        def block(x, p=p):
+            h = layer_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], eps)
+            q = (h @ p["w_q"]).reshape(b, t, cfg.n_heads, hd)
+            k = (h @ p["w_k"]).reshape(b, t, cfg.n_heads, hd)
+            v = (h @ p["w_v"]).reshape(b, t, cfg.n_heads, hd)
+            attn = attention_chunked(q, k, v, causal=True)
+            x = x + attn.reshape(b, t, -1) @ p["w_o"]
+            h = layer_norm(x, p["norm2"]["scale"], p["norm2"]["bias"], eps)
+            x = x + _mha(cfg, h, p, kv=enc, causal=False, prefix="x_")
+            h = layer_norm(x, p["norm3"]["scale"], p["norm3"]["bias"], eps)
+            return x + _mlp(h, p), (k, v)
+
+        blk = jax.checkpoint(block) if cfg.remat else block
+        x, (k, v) = blk(x)
+        self_kv.append(KVCache(k=k, v=v, length=jnp.full((), t, jnp.int32)))
+    x = layer_norm(x, params["dec_norm"]["scale"],
+                   params["dec_norm"]["bias"], eps)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    return logits, WhisperCache(self_kv=self_kv, enc_out=enc,
+                                length=jnp.full((), t, jnp.int32))
+
+
+# ----------------------------------------------------------------- decode --
+@dataclasses.dataclass
+class WhisperCache:
+    self_kv: list          # KVCache per decoder layer
+    enc_out: jax.Array     # [B, S_enc, D]
+    length: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    WhisperCache,
+    lambda c: ((c.self_kv, c.enc_out, c.length), None),
+    lambda _, ch: WhisperCache(*ch))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_out=None) -> WhisperCache:
+    dt = _dtype(cfg)
+    if enc_out is None:
+        enc_out = jnp.zeros((batch, max_len, cfg.d_model), dt)
+    return WhisperCache(
+        self_kv=[KVCache.init(batch, max_len, cfg.n_heads,
+                              cfg.resolved_head_dim, dt)
+                 for _ in range(cfg.n_layers)],
+        enc_out=enc_out,
+        length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, cache: WhisperCache, token, pos):
+    eps = cfg.norm_eps
+    b = token.shape[0]
+    hd = cfg.resolved_head_dim
+    x = params["embed"][token] + params["dec_pos"][pos][None, None].astype(
+        _dtype(cfg))
+    new_kv = []
+    for p, lc in zip(params["dec_layers"], cache.self_kv):
+        h = layer_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], eps)
+        q = (h @ p["w_q"]).reshape(b, 1, cfg.n_heads, hd)
+        k_new = (h @ p["w_k"]).reshape(b, 1, cfg.n_heads, hd)
+        v_new = (h @ p["w_v"]).reshape(b, 1, cfg.n_heads, hd)
+        attn, nlc = decode_attention(q, lc, k_new, v_new, pos=pos)
+        x = x + attn.reshape(b, 1, -1) @ p["w_o"]
+        new_kv.append(nlc)
+        h = layer_norm(x, p["norm2"]["scale"], p["norm2"]["bias"], eps)
+        x = x + _mha(cfg, h, p, kv=cache.enc_out, causal=False, prefix="x_",
+                     direct=True)
+        h = layer_norm(x, p["norm3"]["scale"], p["norm3"]["bias"], eps)
+        x = x + _mlp(h, p)
+    x = layer_norm(x, params["dec_norm"]["scale"],
+                   params["dec_norm"]["bias"], eps)
+    return logits_fn(cfg, params, x), WhisperCache(
+        self_kv=new_kv, enc_out=cache.enc_out, length=cache.length + 1)

@@ -1,0 +1,5 @@
+"""Executable CMPC layer: field, Lagrange machinery, 3-phase protocols."""
+from .field import DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31
+from .protocol import AGECMPCProtocol
+
+__all__ = ["DEFAULT_FIELD", "Field", "P_DEFAULT", "P_MERSENNE31", "AGECMPCProtocol"]

@@ -1,0 +1,100 @@
+"""Elastic worker-pool management: spares, failures, re-planning.
+
+The coded redundancy gives two distinct tolerance windows:
+
+* **Phase-3 window** (free): once workers hold ``I(α_n)``, any
+  ``N − (t²+z)`` of them may vanish; the master re-solves the Vandermonde
+  system on the survivor α-set (``AGECMPCProtocol.decode(survivors=...)``).
+* **Phase-2 window** (needs spares): eq. (9) interpolates ``H(x)`` from all
+  ``N = |P(H)|`` points, so losing a worker *before* the exchange needs a
+  spare.  :class:`ElasticPool` provisions ``N + spares`` evaluation points
+  up front; on failure it re-derives the reconstruction weights for a
+  surviving N-subset — no data re-sharing, the sources' shares at spare α's
+  were distributed in phase 1.
+
+If the pool drops below ``N``, we *re-plan*: re-solve ``min_λ Γ(λ)`` for a
+coarser partitioning (smaller t) whose worker requirement fits the surviving
+pool — trading per-worker load for feasibility (the s/t trade-off of Fig. 2/3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.age import optimal_age_code
+from .field import DEFAULT_FIELD, Field
+from .lagrange import inv_mod, vandermonde
+from .protocol import AGECMPCProtocol
+
+
+@dataclasses.dataclass
+class ElasticPool:
+    """A CMPC plan over ``N + spares`` provisioned workers."""
+
+    s: int
+    t: int
+    z: int
+    m: int
+    spares: int = 2
+    field: Field = DEFAULT_FIELD
+
+    def __post_init__(self):
+        self.proto = AGECMPCProtocol(
+            s=self.s, t=self.t, z=self.z, m=self.m, field=self.field)
+        self.pool_size = self.proto.n_workers + self.spares
+        self.alive = np.ones(self.pool_size, dtype=bool)
+        # provision α's for the whole pool (re-uses the protocol's invertible
+        # prefix and extends it)
+        self._alphas = np.arange(1, self.pool_size + 1, dtype=np.int64)
+
+    # ------------------------------------------------------------- failures
+    def fail(self, workers) -> None:
+        self.alive[np.asarray(workers)] = False
+
+    def active_subset(self) -> np.ndarray:
+        """First N alive workers (phase-2 quorum), or raise if infeasible."""
+        idx = np.nonzero(self.alive)[0]
+        n = self.proto.n_workers
+        if len(idx) < n:
+            raise RuntimeError(
+                f"pool has {len(idx)} alive < N={n}; re-plan required")
+        return idx[:n]
+
+    def reconstruction_weights(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(subset, r-coefficient rows) for the current survivor quorum."""
+        idx = self.active_subset()
+        powers = list(self.proto.powers_h)
+        v = vandermonde(self.field, self._alphas[idx], powers)
+        w = inv_mod(self.field, v)
+        return idx, w
+
+    def phase3_tolerance(self) -> int:
+        """Failures absorbable after the exchange with zero recomputation."""
+        return self.proto.n_workers - self.proto.recovery_threshold
+
+    # -------------------------------------------------------------- re-plan
+    def replan(self) -> Optional[AGECMPCProtocol]:
+        """Pool shrank below N: find the largest-throughput (s', t') whose
+        ``N_AGE(s', t', z)`` fits the surviving pool.  Returns the new plan
+        (or None if even t=1 BGW-like splitting doesn't fit)."""
+        alive = int(self.alive.sum())
+        candidates: List[Tuple[int, AGECMPCProtocol]] = []
+        for t in range(self.t, 0, -1):
+            for s in range(self.s, 0, -1):
+                if s == 1 and t == 1:
+                    continue
+                if self.m % s or self.m % t:
+                    continue
+                code, _ = optimal_age_code(s, t, self.z)
+                if code.n_workers <= alive:
+                    # prefer max st (least per-worker compute: m³/(st²))
+                    candidates.append(
+                        (s * t * t,
+                         AGECMPCProtocol(s=s, t=t, z=self.z, m=self.m,
+                                         field=self.field)))
+        if not candidates:
+            return None
+        candidates.sort(key=lambda c: -c[0])
+        return candidates[0][1]

@@ -1,0 +1,108 @@
+"""Generalized-Vandermonde / Lagrange machinery over F_p.
+
+Two solves appear in AGE-CMPC:
+
+* **Phase 2** -- the workers jointly know N points of ``H(x)`` whose support
+  is ``P(H)`` (|P(H)| = N).  The reconstruction weights ``r_n^{(i,l)}`` of
+  eq. (9) are rows of the inverse of the generalized Vandermonde matrix
+  ``V[n, m] = α_n^{P(H)_m}``.
+* **Phase 3** -- the master interpolates ``I(x)`` (dense support, degree
+  ``t²+z-1``) from any ``t²+z`` surviving workers: a plain Vandermonde solve
+  restricted to the survivor α-set (this is the straggler-tolerance path).
+
+Over a finite field a generalized Vandermonde matrix is not guaranteed
+invertible for an arbitrary evaluation-point set; :func:`choose_alphas`
+searches deterministically for a set making it invertible (a real systems
+concern the paper's real-number intuition glosses over -- see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .field import Field
+
+
+def vandermonde(field: Field, alphas: Sequence[int], powers: Sequence[int]) -> np.ndarray:
+    """V[n, m] = α_n ^ powers[m]  (mod p), int64 numpy."""
+    out = np.empty((len(alphas), len(powers)), dtype=np.int64)
+    for i, a in enumerate(alphas):
+        for j, e in enumerate(powers):
+            out[i, j] = pow(int(a) % field.p, int(e), field.p)
+    return out
+
+
+def inv_mod(field: Field, mat: np.ndarray) -> np.ndarray:
+    """Matrix inverse over F_p by Gauss-Jordan (vectorized row ops)."""
+    p = field.p
+    n = mat.shape[0]
+    if mat.shape != (n, n):
+        raise ValueError(f"square matrix required, got {mat.shape}")
+    a = mat.astype(object) % p          # python ints: no overflow
+    inv = np.eye(n, dtype=object)
+    for col in range(n):
+        piv = None
+        for r in range(col, n):
+            if a[r, col] % p != 0:
+                piv = r
+                break
+        if piv is None:
+            raise np.linalg.LinAlgError(
+                f"singular over F_{p} at column {col}"
+            )
+        if piv != col:
+            a[[col, piv]] = a[[piv, col]]
+            inv[[col, piv]] = inv[[piv, col]]
+        s = pow(int(a[col, col]), p - 2, p)
+        a[col] = (a[col] * s) % p
+        inv[col] = (inv[col] * s) % p
+        for r in range(n):
+            if r != col and a[r, col] % p != 0:
+                f = int(a[r, col])
+                a[r] = (a[r] - f * a[col]) % p
+                inv[r] = (inv[r] - f * inv[col]) % p
+    return inv.astype(np.int64)
+
+
+def is_invertible(field: Field, mat: np.ndarray) -> bool:
+    try:
+        inv_mod(field, mat)
+        return True
+    except np.linalg.LinAlgError:
+        return False
+
+
+def choose_alphas(field: Field, n: int, powers: Sequence[int],
+                  *, max_tries: int = 64) -> np.ndarray:
+    """Deterministically pick N distinct non-zero α's with invertible
+    generalized Vandermonde on ``powers`` (paper sets α_n = n; we start there
+    and re-seed on singularity)."""
+    rng = np.random.default_rng(0)
+    cand = np.arange(1, n + 1, dtype=np.int64)
+    for attempt in range(max_tries):
+        v = vandermonde(field, cand, powers)
+        if is_invertible(field, v):
+            return cand
+        cand = rng.choice(
+            np.arange(1, field.p if field.p < 2**20 else 2**20, dtype=np.int64),
+            size=n, replace=False)
+    raise RuntimeError(f"no invertible α-set found in {max_tries} tries")
+
+
+def reconstruction_weights(field: Field, alphas: Sequence[int],
+                           powers: Sequence[int]) -> np.ndarray:
+    """W[m, n]: coefficient of x^powers[m] = Σ_n W[m,n]·f(α_n)  (eq. (9))."""
+    v = vandermonde(field, alphas, powers)
+    return inv_mod(field, v).astype(np.int64)  # V^{-1}: [m, n]
+
+
+def lagrange_coeff_rows(field: Field, alphas: Sequence[int], degree: int,
+                        wanted: Sequence[int]) -> np.ndarray:
+    """Phase-3 master decode: rows of V^{-1} for a *dense* polynomial of
+    ``degree`` (support 0..degree) evaluated at ``alphas``
+    (len == degree+1), restricted to the ``wanted`` coefficients."""
+    if len(alphas) != degree + 1:
+        raise ValueError(f"need exactly {degree+1} points, got {len(alphas)}")
+    w = reconstruction_weights(field, alphas, list(range(degree + 1)))
+    return w[np.asarray(wanted, dtype=np.int64)]

@@ -1,0 +1,240 @@
+"""Distributed AGE-CMPC: the worker pool mapped onto a mesh axis.
+
+The paper's N edge workers become N logical workers packed onto a named mesh
+axis (round-robin, padded).  Phase-2's worker↔worker exchange of
+``G_n(α_{n'})`` -- the dominant communication, eq. (17) -- is exactly one
+``psum_scatter`` over that axis: every device reduces its local workers'
+contributions to every I(α_{n'}) and receives back only its own n' chunk.
+That is the TPU-native form of the paper's all-pairs exchange (DESIGN.md §3).
+
+``secure_matmul`` is the composable entry point used by the model zoo's MPC
+mode: float in, float out, everything in between in F_p.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .field import Field
+from .protocol import AGECMPCProtocol
+
+
+def _pad_to(x: np.ndarray, n: int, axis: int = 0) -> np.ndarray:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def mod_ring_reduce_scatter(x, axis: str, p: int, n_shards: int):
+    """Reduce-scatter of field elements with per-hop modular folding.
+
+    A plain ``psum_scatter`` must carry int64 (a 256-way sum of values < p
+    overflows int32); folding ``mod p`` at every ring hop keeps the payload
+    int32 — **half the wire bytes** of the int64 collective.  This is the
+    TPU-native "modular collective" form of the paper's phase-2 exchange
+    (beyond-paper optimization; see EXPERIMENTS.md §Perf).
+
+    ``x: [n_shards * chunk, ...]`` int32 field elements (already < p).
+    Returns this shard's reduced chunk ``[chunk, ...]``.
+    """
+    me = jax.lax.axis_index(axis)
+    chunks = x.reshape((n_shards, -1) + x.shape[1:])
+    if n_shards == 1:
+        return chunks[0]
+    perm = [(j, (j - 1) % n_shards) for j in range(n_shards)]
+
+    def my_chunk(s):
+        return jax.lax.dynamic_index_in_dim(
+            chunks, (me + 1 + s) % n_shards, axis=0, keepdims=False)
+
+    def body(s, acc):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        folded = (acc.astype(jnp.int64)
+                  + my_chunk(s).astype(jnp.int64)) % p
+        return folded.astype(acc.dtype)
+
+    # acc starts as chunk (me+1); after n-1 hops it is Σ over all shards of
+    # chunk `me` (verified in tests against psum_scatter)
+    acc = my_chunk(0)
+    return jax.lax.fori_loop(1, n_shards, body, acc)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCMPC:
+    """One protocol instance bound to a mesh axis.
+
+    Workers ``0..N-1`` are padded to ``N_pad`` (a multiple of the axis size)
+    and laid out worker-major so device d owns workers
+    ``d·(N_pad/D) .. (d+1)·(N_pad/D)-1``.  Padded workers have all-zero
+    Vandermonde rows: they contribute nothing to the scattered reduction.
+
+    Optimization knobs (paper-faithful defaults; see EXPERIMENTS.md §Perf):
+
+    * ``wire_dtype``: "int64" (baseline) or "int32" — field elements fit 26
+      bits; int32 halves argument/HBM/wire bytes.  The exchange then uses
+      :func:`mod_ring_reduce_scatter` (per-hop mod fold) instead of a plain
+      ``psum_scatter`` whose partial sums would overflow.
+    * ``prg_masks``: derive phase-2 masks R_w^{(n)} on-device from per-worker
+      PRNG keys instead of shipping ~z·m²/t² scalars per worker from the
+      host (PRG-based masking, standard MPC practice).
+    """
+
+    proto: AGECMPCProtocol
+    mesh: Mesh
+    axis: str = "model"
+    wire_dtype: str = "int64"
+    prg_masks: bool = False
+
+    @property
+    def axis_size(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @property
+    def n_pad(self) -> int:
+        d = self.axis_size
+        return -(-self.proto.n_workers // d) * d
+
+    # ------------------------------------------------------ padded constants
+    def _padded(self, arr: np.ndarray, axes=(0,)) -> jnp.ndarray:
+        out = arr
+        for ax in axes:
+            out = _pad_to(out, self.n_pad, axis=ax)
+        return jnp.asarray(out)
+
+    def _consts(self):
+        pr = self.proto
+        return dict(
+            vand_a=self._padded(pr.vand_a),           # [Np, ts+z]
+            vand_b=self._padded(pr.vand_b),           # [Np, ts+z]
+            g_mix=self._padded(pr.g_mix, axes=(0, 1)),  # [Np, Np']
+            vand_g=self._padded(pr.vand_g_secret),    # [Np, z]
+        )
+
+    # -------------------------------------------------------------- the step
+    def build_step(self):
+        """Returns jitted ``step(terms_a, terms_b, masks) -> I points [Np,...]``.
+
+        * ``terms_a: [ts+z, m/t, m/s]`` -- Aᵀ blocks ++ secret blocks
+          (replicated: every device evaluates its own workers' shares).
+        * ``masks``: per-worker phase-2 masks R_w^{(n)} [Np, z, m/t, m/t]
+          (baseline), or per-worker PRNG keys [Np, 2] when ``prg_masks``.
+        """
+        pr = self.proto
+        p = pr.field.p
+        c = self._consts()
+        axis = self.axis
+        n_shards = self.axis_size
+        wire = jnp.dtype(self.wire_dtype)
+        prg = self.prg_masks
+        z, mt = pr.z, pr.m // pr.t
+        spec_w = P(axis)       # worker-sharded leading axis
+        spec_r = P()           # replicated
+
+        if wire == jnp.int32:
+            c = {k: v.astype(jnp.int32) for k, v in c.items()}
+
+        def step(terms_a, terms_b, masks):
+            def local(vand_a, vand_b, g_mix, vand_g, ta, tb, mk):
+                # phase 1 (local workers' shares)
+                f_a = jnp.einsum("nk,krc->nrc", vand_a.astype(jnp.int64),
+                                 ta.astype(jnp.int64)) % p
+                f_b = jnp.einsum("nk,krc->nrc", vand_b.astype(jnp.int64),
+                                 tb.astype(jnp.int64)) % p
+                # phase 2 compute: H(α_n) = F_A·F_B
+                h = pr.field.matmul(f_a, f_b)
+                # phase 2 exchange: G contributions for every n', then scatter
+                g_all = jnp.einsum("nm,nrc->mrc", g_mix.astype(jnp.int64),
+                                   h) % p                           # [Np', ...]
+                if prg:
+                    # derive local workers' masks from their keys on device:
+                    # raw 64-bit stream mod p (bias 2⁻³⁸) — one generate pass
+                    # + one fold pass, far cheaper than randint's rejection
+                    # machinery (measured in §Perf; the int64 randint variant
+                    # was refuted)
+                    def mask_of(key):
+                        bits = jax.random.bits(key, (z, mt, mt), jnp.uint64)
+                        return (bits % jnp.uint64(p)).astype(jnp.int64)
+
+                    mk_local = jax.vmap(mask_of)(mk)                # [nl,z,...]
+                else:
+                    mk_local = mk.astype(jnp.int64)
+                g_all = (g_all + jnp.einsum(
+                    "mw,nwrc->mrc", vand_g.astype(jnp.int64),
+                    mk_local)) % p
+                if wire == jnp.int32:
+                    i_local = mod_ring_reduce_scatter(
+                        g_all.astype(jnp.int32), axis, p, n_shards)
+                    return i_local.astype(jnp.int64).reshape(
+                        (-1,) + g_all.shape[1:])
+                i_local = jax.lax.psum_scatter(
+                    g_all, axis, scatter_dimension=0, tiled=True)
+                return i_local % p
+
+            return jax.shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=(spec_w, spec_w, P(axis, None), spec_r,
+                          spec_r, spec_r, spec_w),
+                out_specs=spec_w,
+            )(c["vand_a"], c["vand_b"], c["g_mix"], c["vand_g"],
+              terms_a, terms_b, masks)
+
+        return jax.jit(step)
+
+    def run(self, a, b, key, *, survivors: Optional[np.ndarray] = None):
+        """Full distributed run (phases 1-2 on mesh, decode on master)."""
+        pr = self.proto
+        k1a, k1b, k2 = jax.random.split(key, 3)
+        sec_a = pr.field.random(
+            k1a, (pr.z, pr.m // pr.t, pr.m // pr.s))
+        sec_b = pr.field.random(
+            k1b, (pr.z, pr.m // pr.s, pr.m // pr.t))
+        terms_a = jnp.concatenate([pr._split_a(a), sec_a])
+        terms_b = jnp.concatenate([pr._split_b(b), sec_b])
+        if self.prg_masks:
+            masks = jax.vmap(jax.random.fold_in, (None, 0))(
+                k2, jnp.arange(self.n_pad))
+        else:
+            masks = pr.field.random(
+                k2, (self.n_pad, pr.z, pr.m // pr.t, pr.m // pr.t))
+        if self.wire_dtype == "int32" and not self.prg_masks:
+            masks = masks.astype(jnp.int32)
+        if self.wire_dtype == "int32":
+            terms_a = terms_a.astype(jnp.int32)
+            terms_b = terms_b.astype(jnp.int32)
+        i_pts = self.build_step()(terms_a, terms_b, masks)
+        return pr.decode(np.asarray(i_pts)[: pr.n_workers], survivors)
+
+
+# ------------------------------------------------------------- float facade
+def secure_matmul(a, b, *, s: int, t: int, z: int,
+                  field: Optional[Field] = None,
+                  mesh: Optional[Mesh] = None, axis: str = "model",
+                  key=None, scheme: str = "age"):
+    """``AᵀB`` for real-valued ``a, b`` via CMPC.  Composable module entry.
+
+    With ``mesh`` given, phases 1-2 run sharded over ``axis``; otherwise the
+    single-process simulation is used (CI/CPU).
+    """
+    a = jnp.asarray(a)
+    m = a.shape[0]
+    proto = AGECMPCProtocol(
+        s=s, t=t, z=z, m=m, scheme=scheme,
+        **({"field": field} if field else {}))
+    f = proto.field
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ea, eb = f.encode(a), f.encode(b)
+    if mesh is not None:
+        y = ShardedCMPC(proto, mesh, axis).run(ea, eb, key)
+    else:
+        y = proto.run(ea, eb, key)
+    return f.decode(y, products=2).astype(a.dtype)

@@ -1,0 +1,26 @@
+"""LR schedules. WSD (warmup–stable–decay) is the minicpm schedule
+(arXiv:2404.06395): linear warmup → flat plateau → short sharp decay.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        floor: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    decay_frac = (step - warmup - stable) / jnp.maximum(decay, 1)
+    decayed = peak_lr * (floor / peak_lr) ** jnp.clip(decay_frac, 0.0, 1.0)
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(step < warmup + stable, peak_lr, decayed))
+    return jnp.maximum(lr, 0.0)
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           floor_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor_ratio + (1 - floor_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules (FSDP / TP / EP / SP) with divisibility guards.
+
+Production pattern: model code annotates activations with *logical* axis
+names; a rules table maps logical → mesh axes; every mapping is guarded by a
+divisibility check so an arch whose head count (say smollm's 15 q-heads)
+does not divide the TP axis silently falls back to replication on that dim
+instead of failing to partition.
+
+Parameter shardings are inferred from path-name conventions
+(:func:`infer_param_specs`) — FSDP shards the d_model-ish dim over ``data``,
+TP shards heads/ffn/vocab/experts over ``model``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# logical activation axis -> mesh axis (may be tuple for multi-axis sharding)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,            # flipped to "model" under sequence parallelism
+    "seq_kv": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": None,
+    # parameter axes
+    "p_fsdp": "data",       # FSDP dim (usually d_model)
+    "p_tp": "model",        # TP dim (heads*hd / ffn / vocab)
+    "p_experts": "model",
+    "p_stack": None,        # stacked-layer leading dim
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install mesh+rules for model-internal activation constraints."""
+    old_mesh, old_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old_mesh, old_rules
+
+
+def _axis_size(mesh: Mesh, ax: Axis) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax] if ax in mesh.shape else 0
+    return int(np.prod([
+        mesh.shape[a] for a in ax if a in mesh.shape])) if all(
+        a in mesh.shape for a in (x for x in ax)) else _present_size(mesh, ax)
+
+
+def _present_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    out = 1
+    for a in axes:
+        if a in mesh.shape:
+            out *= mesh.shape[a]
+    return out
+
+
+def _resolve(mesh: Mesh, ax: Axis) -> Axis:
+    """Drop mesh axes that don't exist (e.g. no 'pod' on single-pod)."""
+    if ax is None:
+        return None
+    if isinstance(ax, str):
+        return ax if ax in mesh.shape else None
+    present = tuple(a for a in ax if a in mesh.shape)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[dict] = None) -> P:
+    """PartitionSpec for ``shape`` given logical axis names (with guards)."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        ax = _resolve(mesh, rules.get(name)) if name else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        if any(a in used for a in axes):
+            spec.append(None)
+            continue
+        size = _present_size(mesh, axes)
+        if size > 1 and dim % size == 0:
+            spec.append(ax)
+            used.update(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def get_rule(name: str, default=None):
+    """Read a (possibly non-axis) knob from the active rule table."""
+    return _CTX.rules.get(name, default)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ------------------------------------------------------------ param specs --
+# path-name convention -> logical dims (trailing dims; leading stacked dim
+# auto-detected by rank).
+_PARAM_PATTERNS = [
+    ("embed", ("vocab", "p_fsdp")),
+    ("lm_head", ("p_fsdp", "vocab")),
+    ("w_qkv", ("p_fsdp", "p_tp")),
+    ("w_q", ("p_fsdp", "p_tp")),
+    ("w_k", ("p_fsdp", "p_tp")),
+    ("w_v", ("p_fsdp", "p_tp")),
+    ("w_o", ("p_tp", "p_fsdp")),
+    ("moe_w1", ("p_experts", "p_fsdp", None)),
+    ("moe_w3", ("p_experts", "p_fsdp", None)),
+    ("moe_w2", ("p_experts", None, "p_fsdp")),
+    ("router", ("p_fsdp", None)),
+    ("w1", ("p_fsdp", "p_tp")),
+    ("w3", ("p_fsdp", "p_tp")),
+    ("w2", ("p_tp", "p_fsdp")),
+    ("in_proj", ("p_fsdp", "p_tp")),
+    ("out_proj", ("p_tp", "p_fsdp")),
+    ("conv", (None, None)),
+    ("norm", (None,)),
+    ("scale", (None,)),
+    ("bias", (None,)),
+]
+
+
+def _match_logical(name: str, rank: int):
+    for pat, logical in _PARAM_PATTERNS:
+        if pat in name:
+            trailing = list(logical)
+            pad = rank - len(trailing)
+            if pad < 0:
+                trailing = trailing[-rank:]
+            return [None] * pad + trailing  # leading dims: stacked layers
+    return [None] * rank
+
+
+def infer_param_specs(params, mesh: Mesh, rules: Optional[dict] = None):
+    """Pytree of PartitionSpecs for a params pytree (by path-name)."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+
+    def one(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        logical = _match_logical(name, np.ndim(leaf))
+        return spec_for(np.shape(leaf), logical, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def named_sharding_tree(params, mesh: Mesh, rules: Optional[dict] = None):
+    specs = infer_param_specs(params, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

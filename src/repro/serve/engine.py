@@ -1,0 +1,64 @@
+"""Minimal batched serving engine: prefill → greedy decode loop.
+
+Production notes: static-shape caches (pad prefill cache to
+prompt+max_new), batched requests, jit-compiled prefill and decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import get_model
+from ..models.config import ModelConfig
+from ..models.layers import KVCache
+
+
+def _pad_cache(cache, extra: int):
+    """Grow KV caches along the sequence dim by ``extra`` slots."""
+    def pad(x, path=""):
+        return x
+
+    def walk(obj):
+        if isinstance(obj, KVCache):
+            padw = [(0, 0)] * obj.k.ndim
+            padw[-3] = (0, extra)  # [..., S, H, D]
+            return KVCache(k=jnp.pad(obj.k, padw), v=jnp.pad(obj.v, padw),
+                           length=obj.length)
+        if isinstance(obj, (list, tuple)):
+            return type(obj)(walk(o) for o in obj)
+        if dataclasses.is_dataclass(obj):
+            return type(obj)(**{f.name: walk(getattr(obj, f.name))
+                                for f in dataclasses.fields(obj)})
+        return obj
+
+    return walk(cache)
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: ModelConfig
+    params: dict
+
+    def __post_init__(self):
+        self.model = get_model(self.cfg)
+        self._prefill = jax.jit(partial(self.model.prefill, self.cfg))
+        self._decode = jax.jit(partial(self.model.decode_step, self.cfg))
+
+    def generate(self, prompt: jax.Array, max_new: int,
+                 embeds: Optional[jax.Array] = None) -> jax.Array:
+        """prompt: [B, T] int32 → [B, max_new] greedy continuation."""
+        logits, cache = self._prefill(self.params, prompt, embeds=embeds)
+        cache = _pad_cache(cache, max_new)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        base = prompt.shape[1] + (embeds.shape[1] if embeds is not None else 0)
+        out = [tok]
+        for i in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, cache, tok, jnp.int32(base + i))
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,93 @@
+"""Training step factory: loss → grads → (optional microbatch accumulation,
+optional inter-pod int8 gradient compression) → AdamW+WSD update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import get_model
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamW, AdamWState
+from ..optim.schedule import wsd
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    stable: int = 10_000
+    decay: int = 1_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1        # grad-accumulation chunks over batch dim
+    seq_chunk: int = 512         # xent chunking
+    opt_dtype: str = "float32"   # AdamW state dtype
+
+
+def make_optimizer(tc: TrainConfig) -> AdamW:
+    return AdamW(weight_decay=tc.weight_decay, clip_norm=tc.clip_norm,
+                 state_dtype=tc.opt_dtype)
+
+
+# per-arch memory tuning: grad-accumulation so saved layer inputs fit HBM,
+# bf16 optimizer state for the 235B config (see EXPERIMENTS.md §Dry-run)
+ARCH_TRAIN_OVERRIDES = {
+    "qwen3-moe-235b-a22b": TrainConfig(microbatches=1, opt_dtype="bfloat16"),
+    "jamba-v0.1-52b": TrainConfig(microbatches=4),
+    "minicpm-2b": TrainConfig(microbatches=2),
+    "granite-3-2b": TrainConfig(microbatches=2),
+    "phi-3-vision-4.2b": TrainConfig(microbatches=4),
+    "rwkv6-1.6b": TrainConfig(microbatches=2),
+}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    model = get_model(cfg)
+    opt = make_optimizer(tc)
+
+    def loss_of(params, batch):
+        return model.loss_fn(
+            cfg, params, batch["tokens"], batch["targets"],
+            seq_chunk=tc.seq_chunk, embeds=batch.get("embeds"))
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if tc.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = tc.microbatches
+                return jnp.moveaxis(
+                    x.reshape(mb, b // mb, *x.shape[1:]), 0, 0)
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def accum(carry, mb):
+                loss, g = jax.value_and_grad(loss_of)(params, mb)
+                acc_loss, acc_g = carry
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.float32(0.0), zero_g), micro)
+            loss = loss / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        lr = wsd(opt_state.step, peak_lr=tc.peak_lr, warmup=tc.warmup,
+                 stable=tc.stable, decay=tc.decay, floor=tc.peak_lr * 0.1)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "lr": lr, "gnorm": gnorm}
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tc: TrainConfig, key):
+    model = get_model(cfg)
+    params = model.init_params(cfg, key)
+    opt_state = make_optimizer(tc).init(params)
+    return params, opt_state

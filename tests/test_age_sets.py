@@ -1,0 +1,81 @@
+"""Degree-set construction properties (Theorems 1 and 2) over parameter grids."""
+import itertools
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.age import AGECode, GeneralizedPolyCode, polydot_code
+
+GRID = [
+    (s, t, z)
+    for s, t, z in itertools.product(range(1, 6), range(1, 6), range(1, 9))
+    if not (s == 1 and t == 1)
+]
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_secret_powers_closed_form_matches_greedy(s, t, z):
+    """Eq. (6)/(34)-(36) == the greedy C2-avoiding construction (Thm 2)."""
+    for lam in range(z + 1):
+        code = AGECode(s, t, z, lam)
+        assert code.secret_powers_a == code.secret_powers_a_closed_form()
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_conditions_c1_c2_c3(s, t, z):
+    for lam in range(z + 1):
+        AGECode(s, t, z, lam).check_conditions()
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_theorem1_decodability(s, t, z):
+    for lam in range(z + 1):
+        AGECode(s, t, z, lam).check_decodable()
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_secret_power_counts(s, t, z):
+    """|P(S_A)| = |P(S_B)| = z  (z random masking terms each, eq. (32))."""
+    for lam in range(z + 1):
+        code = AGECode(s, t, z, lam)
+        assert len(code.secret_powers_a) == z
+        assert len(code.secret_powers_b) == z
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_coded_powers_shape(s, t, z):
+    """P(C_A) = {0..ts-1} (eq. (3)); |P(C_B)| = ts (gap structure, eq. (4))."""
+    for lam in range(z + 1):
+        code = AGECode(s, t, z, lam)
+        assert code.coded_powers_a == frozenset(range(t * s))
+        assert len(code.coded_powers_b) == t * s
+
+
+def test_polydot_code_structure():
+    """PolyDot (α,β,θ)=(t,1,t(2s-1)): C_A powers are {0..st-1} too."""
+    code = polydot_code(3, 4, 5)
+    assert code.coded_powers_a == frozenset(range(12))
+    code.check_conditions()
+    code.check_decodable()
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    s=st.integers(1, 7),
+    t=st.integers(1, 7),
+    z=st.integers(1, 12),
+    data=st.data(),
+)
+def test_property_garbage_never_hits_important(s, t, z, data):
+    """Property: for random (s,t,z,λ) the C1-C3 invariants and Thm 1 hold."""
+    if s == 1 and t == 1:
+        s = 2
+    lam = data.draw(st.integers(0, z))
+    code = AGECode(s, t, z, lam)
+    code.check_conditions()
+    code.check_decodable()
+    # recovery threshold never exceeds worker count (protocol is realizable)
+    assert code.recovery_threshold <= code.n_workers
+    # important powers all appear in P(H)
+    assert code.important_powers <= code.powers_h

@@ -1,0 +1,41 @@
+"""Paper Example 1 (s=t=z=2): the worked end-to-end example."""
+from repro.core import (
+    n_age_cmpc,
+    n_entangled_cmpc,
+    optimal_age_code,
+)
+from repro.core.age import AGECode
+
+
+def test_example1_worker_count():
+    # "The solution of (13) becomes N=17 and λ*=2 when s=t=z=2."
+    code, lam = optimal_age_code(2, 2, 2)
+    assert code.n_workers == 17
+    assert lam == 2
+    assert n_age_cmpc(2, 2, 2) == 17
+    # "the required number of workers by Entangled-CMPC is 19"
+    assert n_entangled_cmpc(2, 2, 2) == 19
+
+
+def test_example1_polynomials():
+    # C_A = A00 + A01 x + A10 x² + A11 x³  -> powers {0,1,2,3}
+    # C_B = B00 x + B10 + B01 x⁷ + B11 x⁶  -> powers {0,1,6,7}
+    # S_A = Ā0 x⁴ + Ā1 x⁵ ; S_B = B̄0 x¹⁰ + B̄1 x¹¹
+    code = AGECode(2, 2, 2, lam=2)
+    assert code.coded_powers_a == frozenset({0, 1, 2, 3})
+    assert code.coded_powers_b == frozenset({0, 1, 6, 7})
+    assert code.secret_powers_a == frozenset({4, 5})
+    assert code.secret_powers_b == frozenset({10, 11})
+    # important powers carry H1, H3, H7, H9
+    assert code.important_powers == frozenset({1, 3, 7, 9})
+    # H(x) has degree 16 and a full support of 17 powers (N = 17)
+    assert max(code.powers_h) == 16
+    assert code.n_workers == 17
+    # master reconstructs I(x) from t² + z = 6 workers
+    assert code.recovery_threshold == 6
+
+
+def test_example1_conditions():
+    code = AGECode(2, 2, 2, lam=2)
+    code.check_conditions()
+    code.check_decodable()

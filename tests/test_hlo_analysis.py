@@ -1,0 +1,63 @@
+"""Loop-aware HLO analyzer: exactness on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def body(x, w):
+        return x @ w, None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    for L in (1, 4, 16):
+        ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+        r = analyze(_compile_text(scanned, x, ws))
+        assert r["flops"] == 2 * 64**3 * L, (L, r["flops"])
+
+
+def test_nested_scan_multiplicities():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def outer_body(c, _):
+            return jax.lax.scan(inner, c, ws)[0], None
+        return jax.lax.scan(outer_body, x, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    r = analyze(_compile_text(outer, x, ws))
+    assert r["flops"] == 2 * 32**3 * 5 * 3
+
+
+def test_plain_matmul_flops():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    r = analyze(_compile_text(lambda a, b: a @ b, a, b))
+    assert r["flops"] == 2 * 128 * 256 * 64
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
+    r = analyze(_compile_text(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                              a, b))
+    assert r["flops"] == 2 * 4 * 16 * 32 * 8
+
+
+def test_memory_bytes_reasonable_for_matmul():
+    m = 512
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    r = analyze(_compile_text(lambda a, b: a @ b, a, a))
+    want = 3 * m * m * 4  # two reads + one write
+    assert want <= r["hbm_bytes"] <= 3 * want
+    assert r["hbm_bytes_unfused"] >= m * m * 4

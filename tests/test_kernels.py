@@ -1,0 +1,225 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes/dtypes incl. non-block-aligned edges, plus hypothesis
+property sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.modmatmul import modmatmul
+from repro.kernels.polyeval import polyeval
+from repro.kernels.rwkv6 import rwkv6
+from repro.mpc.field import P_DEFAULT
+
+# --------------------------------------------------------------- modmatmul --
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (8, 8, 8, 8, 8, 8),
+        (16, 300, 12, 8, 8, 128),      # k not block multiple
+        (33, 65, 17, 16, 16, 32),      # nothing aligned
+        (128, 512, 128, 128, 128, 512),
+        (1, 7, 1, 8, 8, 8),            # degenerate
+        (64, 1024, 64, 32, 32, 512),   # multi K-fold
+    ],
+)
+def test_modmatmul_matches_oracle(m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a = jnp.asarray(rng.integers(0, P_DEFAULT, (m, k)), jnp.int64)
+    b = jnp.asarray(rng.integers(0, P_DEFAULT, (k, n)), jnp.int64)
+    got = modmatmul(a, b, p=P_DEFAULT, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.modmatmul_ref(a, b, p=P_DEFAULT)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_modmatmul_worst_case_values():
+    """All entries p-1 (max magnitude): the fold window must stay exact."""
+    m = kk = n = 64
+    a = jnp.full((m, kk), P_DEFAULT - 1, jnp.int64)
+    b = jnp.full((kk, n), P_DEFAULT - 1, jnp.int64)
+    got = modmatmul(a, b, p=P_DEFAULT, bk=512)
+    want = (pow(P_DEFAULT - 1, 2, P_DEFAULT) * kk) % P_DEFAULT
+    np.testing.assert_array_equal(np.asarray(got), np.full((m, n), want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 600),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_modmatmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, P_DEFAULT, (m, k)), jnp.int64)
+    b = jnp.asarray(rng.integers(0, P_DEFAULT, (k, n)), jnp.int64)
+    got = modmatmul(a, b, p=P_DEFAULT, bm=16, bn=16, bk=128, interpret=True)
+    want = (np.asarray(a).astype(object) @ np.asarray(b).astype(object)) % P_DEFAULT
+    np.testing.assert_array_equal(np.asarray(got), np.array(want, np.int64))
+
+
+# ---------------------------------------------------------------- polyeval --
+
+
+@pytest.mark.parametrize("n,k,c", [(17, 6, 16), (5, 30, 100), (64, 12, 513)])
+def test_polyeval_matches_oracle(n, k, c):
+    rng = np.random.default_rng(n + k + c)
+    vand = jnp.asarray(rng.integers(0, P_DEFAULT, (n, k)), jnp.int64)
+    terms = jnp.asarray(rng.integers(0, P_DEFAULT, (k, c)), jnp.int64)
+    got = polyeval(vand, terms, p=P_DEFAULT, interpret=True)
+    want = ref.polyeval_ref(vand, terms, p=P_DEFAULT)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------- flash attention --
+
+
+@pytest.mark.parametrize(
+    "b,t,s,hq,hkv,d,causal",
+    [
+        (1, 64, 64, 4, 4, 32, True),    # MHA causal
+        (2, 128, 128, 8, 2, 16, True),  # GQA 4:1
+        (1, 100, 100, 4, 1, 32, True),  # ragged T, MQA
+        (1, 64, 64, 4, 4, 32, False),   # non-causal
+        (2, 37, 37, 6, 3, 8, True),     # odd everything
+    ],
+)
+def test_flash_attention_matches_oracle(b, t, s, hq, hkv, d, causal):
+    key = jax.random.PRNGKey(b * 100 + t)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, t, hq, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (b, s, hkv, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(kk, (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(kv, (1, 64, 2, 32), jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-2, rtol=3e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(8, 96),
+    hkv=st.sampled_from([1, 2, 3]),
+    group=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_property(t, hkv, group, d, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, t, hkv * group, d), jnp.float32)
+    k = jax.random.normal(kk, (1, t, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (1, t, hkv, d), jnp.float32)
+    got = flash_attention(q, k, v, bq=16, bk=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------- rwkv6 --
+
+
+@pytest.mark.parametrize(
+    "b,t,h,dk,dv,bt",
+    [
+        (1, 16, 2, 8, 8, 8),
+        (2, 50, 3, 16, 16, 16),   # T not block multiple
+        (1, 64, 1, 32, 16, 64),   # K != V
+    ],
+)
+def test_rwkv6_matches_oracle(b, t, h, dk, dv, bt):
+    key = jax.random.PRNGKey(t)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, t, h, dk), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, h, dk), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, h, dv), jnp.float32)
+    w = jax.random.normal(ks[3], (b, t, h, dk), jnp.float32)
+    u = jax.random.normal(ks[4], (h, dk), jnp.float32)
+    got = rwkv6(r, k, v, w, u, bt=bt, interpret=True)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.integers(4, 40),
+    h=st.sampled_from([1, 2]),
+    dk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rwkv6_property(t, h, dk, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (1, t, h, dk))
+    k = jax.random.normal(ks[1], (1, t, h, dk))
+    v = jax.random.normal(ks[2], (1, t, h, dk))
+    w = jax.random.normal(ks[3], (1, t, h, dk))
+    u = jax.random.normal(ks[4], (h, dk))
+    got = rwkv6(r, k, v, w, u, bt=8, interpret=True)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------- chunked wkv --
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+def test_rwkv6_chunked_matches_sequential(chunk):
+    """The chunked-parallel WKV (§Perf C1) is algebraically identical to
+    the sequential recurrence, including the final state."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    b, t, h, dk, dv = 2, 37, 2, 8, 8   # t not a chunk multiple
+    r = jax.random.normal(ks[0], (b, t, h, dk))
+    k = jax.random.normal(ks[1], (b, t, h, dk))
+    v = jax.random.normal(ks[2], (b, t, h, dv))
+    w = jax.random.normal(ks[3], (b, t, h, dk)) - 2.0
+    u = jax.random.normal(ks[4], (h, dk))
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    got = ref.rwkv6_chunked(r, k, v, w, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5, rtol=5e-5)
+    from repro.kernels.ref import rwkv6_scan_with_state
+    _, s_ref = rwkv6_scan_with_state(r, k, v, w, u)
+    _, s_chk = ref.rwkv6_chunked(r, k, v, w, u, chunk=chunk,
+                                 return_state=True)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_rwkv6_chunked_strong_decay_stable():
+    """All exponents ≤ 0: no overflow even under strong decay (w near 0)."""
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 5)
+    b, t, h, dk = 1, 64, 1, 4
+    r = jax.random.normal(ks[0], (b, t, h, dk))
+    k = jax.random.normal(ks[1], (b, t, h, dk))
+    v = jax.random.normal(ks[2], (b, t, h, dk))
+    w = jnp.zeros((b, t, h, dk))       # decay e^{-1} per step, 64 steps
+    u = jax.random.normal(ks[4], (h, dk))
+    got = ref.rwkv6_chunked(r, k, v, w, u, chunk=64)
+    want = ref.rwkv6_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5, rtol=5e-5)

@@ -1,0 +1,97 @@
+"""Lemmas 4-7 (worker-count dominance) + Corollaries 8-10 structure."""
+import itertools
+
+import pytest
+
+from repro.core.age import optimal_age_code, polydot_code
+from repro.core.overheads import overheads, scheme_overheads
+from repro.core.worker_counts import (
+    n_age_cmpc,
+    n_entangled_cmpc,
+    n_gcsa_na,
+    n_polydot_cmpc,
+    n_ssmm,
+    optimal_lambda,
+)
+
+GRID = [
+    (s, t, z)
+    for s, t, z in itertools.product(range(1, 7), range(1, 7), range(1, 20))
+    if not (s == 1 and t == 1)
+]
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_lemma4_vs_entangled(s, t, z):
+    n_age = n_age_cmpc(s, t, z)
+    n_ent = n_entangled_cmpc(s, t, z)
+    assert n_age <= n_ent
+    if t != 1 and optimal_lambda(s, t, z) == 0:
+        assert n_age == n_ent
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_lemma5_vs_ssmm(s, t, z):
+    n_age = n_age_cmpc(s, t, z)
+    assert n_age <= n_ssmm(s, t, z)
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_lemma6_vs_gcsa_na(s, t, z):
+    assert n_age_cmpc(s, t, z) <= n_gcsa_na(s, t, z)
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_lemma7_vs_polydot(s, t, z):
+    assert n_age_cmpc(s, t, z) <= n_polydot_cmpc(s, t, z)
+
+
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_polydot_closed_forms_match_enumeration(s, t, z):
+    """Where the paper quotes [13]'s closed forms, enumeration agrees."""
+    if t == 1:
+        return
+    ts = t * s
+    if s == 1 and z > t:
+        assert n_polydot_cmpc(s, t, z) == polydot_code(s, t, z).n_workers
+    elif s != 1 and z > ts:
+        assert n_polydot_cmpc(s, t, z) == polydot_code(s, t, z).n_workers
+
+
+def test_fig2_operating_point():
+    """Paper Fig. 2: m=36000, st=36, z=42 -- AGE ≤ all, == Entangled for t ≤ 3."""
+    z = 42
+    for s, t in [(1, 36), (2, 18), (3, 12), (4, 9), (6, 6), (9, 4),
+                 (12, 3), (18, 2), (36, 1)]:
+        counts = {
+            "age": n_age_cmpc(s, t, z),
+            "ent": n_entangled_cmpc(s, t, z),
+            "ssmm": n_ssmm(s, t, z),
+            "gcsa": n_gcsa_na(s, t, z),
+            "pd": n_polydot_cmpc(s, t, z),
+        }
+        assert counts["age"] == min(counts.values())
+        if t <= 3:
+            assert counts["age"] == counts["ent"]
+        else:
+            assert counts["age"] < counts["ent"]
+
+
+def test_overheads_formulas():
+    """Cor. 8-10 at Example 1's operating point (m=4, s=t=z=2, N=17)."""
+    m, s, t, z, n = 4, 2, 2, 2, 17
+    o = overheads(m, s, t, z, n)
+    assert o.computation == m**3 / (s * t * t) + m**2 + n * (t * t + z - 1) * m**2 / t**2
+    assert o.storage == (2 * n + z + 1) * m**2 / t**2 + 2 * m**2 / (s * t) + t**2
+    assert o.communication == n * (n - 1) * m**2 / t**2
+
+
+def test_fig3_ordering():
+    """AGE's smaller N ⇒ smaller per-worker storage/comm at fixed (s,t)."""
+    m, z = 36000, 42
+    for s, t in [(4, 9), (6, 6), (9, 4)]:
+        o = scheme_overheads(m, s, t, z)
+        for name in ("entangled", "ssmm", "gcsa_na", "polydot"):
+            assert o["age"].storage <= o[name].storage
+            assert o["age"].communication <= o[name].communication
+            assert o["age"].computation <= o[name].computation

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+(The full configs are exercised only via the dry-run.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models.api import get_model
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+BATCH, SEQ = 2, 32
+
+
+def _batch_for(cfg):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                              cfg.vocab)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (BATCH, cfg.frontend_positions, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (BATCH, SEQ, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    hidden, aux = model.forward(cfg, params, batch["tokens"],
+                                embeds=batch.get("embeds"))
+    t_expect = SEQ + (cfg.frontend_positions if cfg.family == "vlm" else 0)
+    assert hidden.shape == (BATCH, t_expect, cfg.d_model)
+    assert jnp.isfinite(hidden).all(), f"{arch}: non-finite hidden"
+    assert jnp.isfinite(aux).all()
+    logits = model.logits_fn(cfg, params, hidden[:, -1:])
+    assert logits.shape[-1] == cfg.padded_vocab()
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_finite(arch):
+    cfg = reduced(get_config(arch))
+    tc = TrainConfig(seq_chunk=16, warmup=1, stable=2, decay=1)
+    params, opt_state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tc))
+    batch = _batch_for(cfg)
+    params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: loss NaN"
+    assert np.isfinite(float(metrics["gnorm"]))
+    assert int(opt_state.step) == 1
+    # params actually moved
+    leaves0 = jax.tree.leaves(params)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_step_finite(arch):
+    cfg = reduced(get_config(arch))
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    if cfg.family == "encdec":
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (BATCH, SEQ, cfg.d_model), jnp.float32)
+        enc = model.encode(cfg, params, frames)
+        cache = model.init_cache(cfg, BATCH, SEQ, enc_out=enc)
+    else:
+        cache = model.init_cache(cfg, BATCH, SEQ)
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    logits, cache = model.decode_step(cfg, params, cache, tok, jnp.int32(0))
+    assert logits.shape[:2] == (BATCH, 1)
+    assert jnp.isfinite(logits[..., : cfg.vocab]).all()
+
+
+def test_param_counts_match_configs():
+    """Full-config parameter counts are in the advertised ballparks."""
+    expected = {
+        "minicpm-2b": (2.0e9, 3.6e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "granite-3-2b": (2.0e9, 3.0e9),
+        "smollm-360m": (0.3e9, 0.45e9),
+        "olmoe-1b-7b": (6.0e9, 8.0e9),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.6e11),
+        "phi-3-vision-4.2b": (3.5e9, 4.5e9),
+        "rwkv6-1.6b": (1.3e9, 2.1e9),
+        "jamba-v0.1-52b": (4.5e10, 6.0e10),
+        "whisper-small": (0.2e9, 0.35e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+    # MoE active params
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.active_param_count() < 0.2 * q.param_count()
