@@ -1,23 +1,79 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the persistent
+``BENCH_*.json`` trajectory (fused-vs-baseline speedup pairs appended per
+run so future PRs can't regress the fast path silently)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-def time_us(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+
+def time_us(fn, *args, warmup: int = 1, iters: int = 5, best_of: int = 1,
+            **kw) -> float:
+    """Mean per-call µs over ``iters`` calls; with ``best_of > 1`` the
+    minimum of that many repeated batches (filters scheduler noise on
+    shared/small boxes — the standard microbenchmark estimator)."""
     for _ in range(warmup):
         fn(*args, **kw)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args, **kw)
-    try:  # block on async dispatch
-        import jax
 
-        jax.block_until_ready(out)
-    except Exception:
-        pass
-    return (time.perf_counter() - t0) / iters * 1e6
+    def batch() -> float:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args, **kw)
+        try:  # block on async dispatch
+            import jax
+
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    return min(batch() for _ in range(max(1, best_of)))
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_pair(records: list, name: str, fused_us: float, baseline_us: float,
+              derived: str = "") -> None:
+    """Print a fused/baseline pair and collect it for the JSON trajectory."""
+    speedup = baseline_us / fused_us if fused_us else float("inf")
+    emit(f"{name}_fused", fused_us,
+         f"{speedup:.2f}x-vs-baseline" + (f";{derived}" if derived else ""))
+    emit(f"{name}_baseline", baseline_us, derived or "baseline")
+    records.append({
+        "name": name,
+        "fused_us": round(fused_us, 1),
+        "baseline_us": round(baseline_us, 1),
+        "speedup": round(speedup, 3),
+        "derived": derived,
+    })
+
+
+def write_trajectory(stem: str, records: list) -> str:
+    """Append this run's records to ``BENCH_<stem>.json`` at the repo root.
+
+    The file holds a list of runs (a trajectory), newest last, so a later
+    PR can diff its speedups against history.
+    """
+    path = os.path.join(_ROOT, f"BENCH_{stem}.json")
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = []
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "entries": records,
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"[bench-json] {len(records)} entries appended -> {path}")
+    return path

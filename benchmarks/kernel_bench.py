@@ -1,6 +1,11 @@
 """Kernel micro-benchmarks: Pallas (interpret) correctness-path timing plus
 the jnp oracle timing (CPU wall time; TPU perf comes from §Roofline, not
 from this box).  Emits ``name,us_per_call,derived`` CSV.
+
+The field fast-path primitives additionally emit fused-vs-baseline pairs
+into ``BENCH_KERNELS.json``: Barrett ``mod_p`` vs hardware ``%``, the
+limb-decomposed f64 matmul vs the int64 einsum, and the batched Pallas
+worker matmul vs a per-worker Python loop over single-matmul calls.
 """
 from __future__ import annotations
 
@@ -12,15 +17,17 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import emit, time_us  # noqa: E402
+from benchmarks.common import emit, emit_pair, time_us, write_trajectory  # noqa: E402
 from repro.kernels import ref  # noqa: E402
-from repro.kernels.modmatmul import modmatmul  # noqa: E402
+from repro.kernels.barrett import matmul_limbs, mod_p  # noqa: E402
+from repro.kernels.modmatmul import modmatmul, modmatmul_batched  # noqa: E402
 from repro.kernels.polyeval import polyeval  # noqa: E402
-from repro.mpc.field import P_DEFAULT  # noqa: E402
+from repro.mpc.field import P_DEFAULT, acc_window  # noqa: E402
 
 
 def main():
     rng = np.random.default_rng(0)
+    records = []
     # phase-2 worker matmul at a realistic worker block size
     m = 512
     a = jnp.asarray(rng.integers(0, P_DEFAULT, (m, m)), jnp.int64)
@@ -35,6 +42,44 @@ def main():
                  iters=1, warmup=1)
     emit("modmatmul_pallas_interp_512", us, "correctness-path")
 
+    # Barrett mod_p vs hardware remainder on a phase-2-sized accumulator
+    x = jnp.asarray(
+        rng.integers(0, 2**62, (512, 512), dtype=np.int64), jnp.int64)
+    jit_barrett = jax.jit(lambda v: mod_p(v, P_DEFAULT))
+    jit_rem = jax.jit(lambda v: v % P_DEFAULT)
+    us_b = time_us(jit_barrett, x, iters=10)
+    us_r = time_us(jit_rem, x, iters=10)
+    emit_pair(records, "mod_p_barrett_512x512", us_b, us_r,
+              "multiply-shift-vs-hw-div")
+
+    # limb-decomposed f64 matmul vs int64 matmul+fold (fused-path workhorse)
+    w, mw = 17, 72
+    fa = jnp.asarray(rng.integers(0, P_DEFAULT, (w, mw, mw)), jnp.int64)
+    fb = jnp.asarray(rng.integers(0, P_DEFAULT, (w, mw, mw)), jnp.int64)
+    jit_limb = jax.jit(lambda x, y: matmul_limbs(x, y, p=P_DEFAULT))
+    jit_int = jax.jit(lambda x, y: jnp.matmul(x, y) % P_DEFAULT)
+    us_l = time_us(jit_limb, fa, fb, iters=10)
+    us_i = time_us(jit_int, fa, fb, iters=10)
+    emit_pair(records, "matmul_limbs_17x72", us_l, us_i, "f64-gemm-vs-int64")
+
+    # batched Pallas worker matmul vs per-worker kernel loop (interpret)
+    wb, ms = 8, 128
+    ba = jnp.asarray(rng.integers(0, P_DEFAULT, (wb, ms, ms)), jnp.int64)
+    bb = jnp.asarray(rng.integers(0, P_DEFAULT, (wb, ms, ms)), jnp.int64)
+
+    def batched():
+        return modmatmul_batched(ba, bb, p=P_DEFAULT, interpret=True)
+
+    def looped():
+        return jnp.stack([
+            modmatmul(ba[i], bb[i], p=P_DEFAULT, interpret=True)
+            for i in range(wb)])
+
+    us_batch = time_us(batched, iters=1, warmup=1)
+    us_loop = time_us(looped, iters=1, warmup=1)
+    emit_pair(records, "modmatmul_batched_8x128", us_batch, us_loop,
+              "one-pallas-call-vs-per-worker-loop;interpret-mode-timing")
+
     # share evaluation (phase 1): N=476 workers, 78 terms, 4096-col blocks
     vand = jnp.asarray(rng.integers(0, P_DEFAULT, (476, 78)), jnp.int64)
     terms = jnp.asarray(rng.integers(0, P_DEFAULT, (78, 4096)), jnp.int64)
@@ -44,6 +89,8 @@ def main():
     us = time_us(lambda: polyeval(vand, terms, p=P_DEFAULT, interpret=True),
                  iters=1, warmup=1)
     emit("polyeval_pallas_interp", us, "correctness-path")
+    emit("acc_window_p_default", float(acc_window(P_DEFAULT)),
+         "products-per-int64-fold")
 
     # flash attention oracle vs pallas-interpret
     q = jax.random.normal(jax.random.PRNGKey(0), (1, 512, 8, 64), jnp.float32)
@@ -59,6 +106,8 @@ def main():
     jit_wk = jax.jit(lambda r, k, v, w, u: ref.rwkv6_ref(r, k, v, w, u))
     us = time_us(jit_wk, r, r, v, r, u, iters=3)
     emit("rwkv6_ref_jnp_T256", us, "wkv-scan")
+
+    write_trajectory("KERNELS", records)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
 """End-to-end CMPC protocol benchmark: AGE vs Entangled vs PolyDot,
 executable on CPU at reduced m.  Emits wall time + the paper's predicted
 overhead counts (Cor. 8-10) so measured/predicted scaling is visible.
+
+Since the fused fast path landed, every scheme is timed BOTH ways — the
+default fused ``run`` and the seed-faithful ``run_reference`` — and the
+(fused, baseline, speedup) triples are appended to ``BENCH_PROTOCOL.json``
+(see :func:`benchmarks.common.write_trajectory`).  Plan construction gets
+the same treatment: vectorized Montgomery/int64 build vs the interpreted
+object-dtype build, at N = 17 and N = 47.
 """
 from __future__ import annotations
 
@@ -11,24 +18,42 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import emit, time_us  # noqa: E402
+from benchmarks.common import emit, emit_pair, time_us, write_trajectory  # noqa: E402
 from repro.core.overheads import overheads  # noqa: E402
 from repro.mpc import AGECMPCProtocol  # noqa: E402
+from repro.mpc.field import DEFAULT_FIELD  # noqa: E402
+from repro.mpc.planner import build_plan, get_plan  # noqa: E402
 
 
 def main():
     m, s, t, z = 144, 2, 2, 2
     rng = np.random.default_rng(0)
+    records = []
     for scheme in ("age", "entangled", "polydot"):
         proto = AGECMPCProtocol(s=s, t=t, z=z, m=m, scheme=scheme)
         a = rng.integers(0, proto.field.p, (m, m))
         b = rng.integers(0, proto.field.p, (m, m))
         key = jax.random.PRNGKey(0)
-        us = time_us(proto.run, a, b, key, iters=2, warmup=1)
+        us_fused = time_us(proto.run, a, b, key, iters=5, warmup=2,
+                           best_of=3)
+        us_base = time_us(proto.run_reference, a, b, key, iters=5,
+                          warmup=2, best_of=3)
         o = overheads(m, s, t, z, proto.n_workers)
-        emit(f"cmpc_{scheme}_m{m}", us,
-             f"N={proto.n_workers};xi={o.computation:.3e};"
-             f"sigma={o.storage:.3e};zeta={o.communication:.3e}")
+        derived = (f"N={proto.n_workers};xi={o.computation:.3e};"
+                   f"sigma={o.storage:.3e};zeta={o.communication:.3e}")
+        emit_pair(records, f"cmpc_{scheme}_m{m}", us_fused, us_base, derived)
+
+    # plan construction: vectorized vs interpreted, N = 17 and N = 47
+    for (ps, pt, pz) in ((2, 2, 2), (3, 3, 3)):
+        pm = ps * pt * 4
+        us_new = time_us(build_plan, "age", ps, pt, pz, None, DEFAULT_FIELD,
+                         pm, iters=5, warmup=2, best_of=3)
+        us_ref = time_us(build_plan, "age", ps, pt, pz, None, DEFAULT_FIELD,
+                         pm, use_reference=True, iters=5, warmup=2, best_of=3)
+        n = get_plan("age", ps, pt, pz, None, DEFAULT_FIELD, pm).n_workers
+        emit_pair(records, f"plan_build_N{n}", us_new, us_ref,
+                  f"s={ps};t={pt};z={pz}")
+
     # straggler decode at exactly the threshold
     proto = AGECMPCProtocol(s=s, t=t, z=z, m=m)
     a = rng.integers(0, proto.field.p, (m, m))
@@ -40,6 +65,8 @@ def main():
                  survivors=surv, iters=2, warmup=1)
     emit(f"cmpc_age_straggler_m{m}", us,
          f"decode-from-{proto.recovery_threshold}-of-{proto.n_workers}")
+
+    write_trajectory("PROTOCOL", records)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,149 @@
+"""Barrett-style modular reduction for the field fast path (DESIGN.md §3).
+
+Both supported primes are *pseudo-Mersenne*: ``p = 2^b − c`` with tiny ``c``
+(``2²⁶ − 5`` and ``2³¹ − 1``).  For such primes the Barrett quotient step
+``q = ⌊x·μ / 2^k⌋`` collapses to a multiply-shift *fold*::
+
+    x ≡ c · (x >> b) + (x & (2^b − 1))   (mod p)
+
+Each fold shrinks ``x`` by ~``b − log₂(c)`` bits; a statically-unrolled
+handful of folds plus one conditional subtract reduces any non-negative
+int64 (``x < 2⁶³``) to ``[0, p)`` with **no integer division** — the
+operation XLA/Pallas lowers to shifts, masks and adds, all VPU-friendly.
+The fold count is computed at trace time from the worst-case bound, so the
+jitted program contains exactly the folds it needs and nothing else.
+
+``mod_p`` is the shared reduction primitive used by
+
+* the Pallas kernels (:mod:`repro.kernels.modmatmul`,
+  :mod:`repro.kernels.polyeval`) for their per-K-block folds, and
+* the fused jnp protocol path (:func:`matmul_folded`, used by
+  :meth:`repro.mpc.protocol.AGECMPCProtocol.run`).
+
+For a prime that is *not* pseudo-Mersenne we fall back to the hardware
+remainder (``%``) so the helpers stay total.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+_MAX_INPUT_BITS = 63  # mod_p domain: 0 <= x < 2^63 (non-negative int64)
+
+
+@functools.lru_cache(maxsize=None)
+def barrett_params(p: int):
+    """``(b, c, n_folds)`` for the pseudo-Mersenne fold, or ``None``.
+
+    ``n_folds`` is the number of ``c·hi + lo`` folds after which the
+    worst-case value is provably ``< 2p`` (so one conditional subtract
+    finishes the reduction).  Returns ``None`` when the fold does not
+    converge quickly (``c`` too large relative to ``2^b``).
+    """
+    if p < 3:
+        return None
+    b = p.bit_length()
+    c = (1 << b) - p
+    bound = (1 << _MAX_INPUT_BITS) - 1
+    for n_folds in range(1, 8):
+        bound = c * (bound >> b) + ((1 << b) - 1)
+        if bound < 2 * p:
+            return b, c, n_folds
+    return None
+
+
+def mod_p(x, p: int):
+    """``x mod p`` for non-negative int64 ``x < 2⁶³`` via multiply-shift.
+
+    Exact drop-in for ``x % p`` on the fast-path primes; traces to shifts,
+    masks, adds and one ``where`` — no integer division.
+    """
+    params = barrett_params(p)
+    if params is None:
+        return x % p
+    b, c, n_folds = params
+    mask = (1 << b) - 1
+    x = jnp.asarray(x)
+    for _ in range(n_folds):
+        x = c * (x >> b) + (x & mask)
+    return jnp.where(x >= p, x - p, x)
+
+
+def matmul_limbs(a, b, *, p: int):
+    """Exact ``(a @ b) mod p`` through limb-decomposed f64 matmuls.
+
+    XLA has no fast integer GEMM on CPU (int64 matmul lowers to scalar
+    loops), but float64 GEMM is exact for integer values below 2⁵³.  Split
+    each operand into two ``lb``-bit limbs (``lb = ⌈bits(p)/2⌉``) and form
+    the product Karatsuba-style with THREE f64 matmuls::
+
+        a·b = hh·2^{2lb} + (  (ah+al)(bh+bl) − hh − ll  )·2^{lb} + ll
+
+    Every partial sum is an integer < 2^{2lb+2}·K ≤ 2⁵³, so the float
+    pipeline is bit-exact; the limbs are then recombined in int64 with
+    Barrett folds.  This is the CPU analogue of the TPU 8-bit-limb MXU
+    schedule (DESIGN.md §3).  Requires ``K ≤ 2^{53−2lb−2}`` (2²⁵ for the
+    default prime) — far above any protocol shape; larger K chunks
+    recursively.  Leading batch dims broadcast like :func:`jnp.matmul`.
+    """
+    if p.bit_length() > 31:
+        raise ValueError("limb recombination needs p < 2^31")
+    lb = (p.bit_length() + 1) // 2
+    k_max = 1 << (53 - (2 * lb + 2))
+    a = jnp.asarray(a, jnp.int64)
+    b = jnp.asarray(b, jnp.int64)
+    k = a.shape[-1]
+    if k > k_max:  # fold exact-size chunks (never hit by protocol shapes)
+        out = None
+        for lo in range(0, k, k_max):
+            part = matmul_limbs(a[..., lo:lo + k_max],
+                                b[..., lo:lo + k_max, :], p=p)
+            out = part if out is None else mod_p(out + part, p)
+        return out
+    mask = (1 << lb) - 1
+    ah = (a >> lb).astype(jnp.float64)
+    al = (a & mask).astype(jnp.float64)
+    bh = (b >> lb).astype(jnp.float64)
+    bl = (b & mask).astype(jnp.float64)
+    hh = jnp.matmul(ah, bh)
+    ll = jnp.matmul(al, bl)
+    mid = jnp.matmul(ah + al, bh + bl) - hh - ll
+    hh = mod_p(hh.astype(jnp.int64), p)
+    mid = mod_p(mid.astype(jnp.int64), p)
+    s2 = (1 << (2 * lb)) % p
+    s1 = (1 << lb) % p
+    # hh·s2 + mid·s1 < 2·p² < 2⁶³; + (ll mod p) after one more fold
+    return mod_p(mod_p(hh * s2 + mid * s1, p) + mod_p(ll.astype(jnp.int64), p), p)
+
+
+def matmul_folded(a, b, *, p: int, window: int):
+    """Exact ``(a @ b) mod p`` with chunk-then-fold accumulation + Barrett.
+
+    ``a: [..., M, K]``, ``b: [..., K, N]`` int64 field elements (values in
+    ``[0, p)``); leading batch dims broadcast like :func:`jnp.matmul`.
+    ``window`` is the exact int64 accumulation window for ``p`` (see
+    :func:`repro.mpc.field.acc_window`): up to ``window`` products are
+    summed raw in int64, then folded with :func:`mod_p`.  This is the fused
+    protocol path's workhorse — one XLA dot per K-chunk, one fold per
+    chunk, no per-product remainders.
+    """
+    a = jnp.asarray(a, jnp.int64)
+    b = jnp.asarray(b, jnp.int64)
+    k = a.shape[-1]
+    if window <= 1 and k > 1:
+        prods = mod_p(a[..., :, :, None] * b[..., None, :, :], p)
+        return mod_p(jnp.sum(prods, axis=-2), p)
+    if k <= window:
+        return mod_p(jnp.matmul(a, b), p)
+    n_chunks = -(-k // window)
+    pad = n_chunks * window - k
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+    a = a.reshape(*a.shape[:-1], n_chunks, window)
+    b = b.reshape(*b.shape[:-2], n_chunks, window, b.shape[-1])
+    part = mod_p(jnp.einsum("...mcw,...cwn->...cmn", a, b), p)
+    # n_chunks partial sums, each < p: the re-fold stays inside int64 for
+    # any realistic K (n_chunks · p < 2⁶³ ⇔ K < window · 2⁶³/p).
+    return mod_p(jnp.sum(part, axis=-3), p)

@@ -6,9 +6,16 @@ after flattening each m/t × m/s block).  Same algebra as a matmul but a very
 different shape regime: K = ts+z terms is tiny (tens), N_workers is small
 (tens..hundreds), and the trailing dim is the flattened block (large).  The
 kernel therefore keeps the whole K dimension resident and walks (worker-block
-× column-block) tiles — one fold at the end, no K loop.
+× column-block) tiles — one Barrett fold (:func:`repro.kernels.barrett.mod_p`)
+at the end, no K loop.
 
-Exactness: products < 2⁵²; K ≤ 512 terms sum < 2⁶¹ in int64.
+The same shape regime covers the phase-2 exchange (``G``-mix: ``g_mix.T @
+H-points``) and the phase-3 decode (``V⁻¹ rows @ I-points``), so
+``AGECMPCProtocol.run(mode="pallas")`` routes all three through this kernel.
+
+Exactness: K must fit one accumulation window — ``K ≤ acc_window(p)``
+(:func:`repro.mpc.field.acc_window`, the shared contract; 2048 for the
+default prime, always true for K = ts + z).
 """
 from __future__ import annotations
 
@@ -18,6 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..mpc.field import acc_window
+from .barrett import mod_p
+
 
 def _polyeval_kernel(v_ref, t_ref, o_ref, *, p: int):
     v = v_ref[...]          # [bn, K]
@@ -25,7 +35,7 @@ def _polyeval_kernel(v_ref, t_ref, o_ref, *, p: int):
     acc = jax.lax.dot_general(
         v, t, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int64
     )
-    o_ref[...] = acc % p
+    o_ref[...] = mod_p(acc, p)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "bn", "bc", "interpret"))
@@ -40,13 +50,16 @@ def polyeval(
 ) -> jax.Array:
     """``vand: [N, K]`` (α powers), ``terms: [K, C]`` (flattened blocks).
 
-    Returns ``[N, C]`` shares.  K must be ≤ 512 (one exact int64 window —
-    always true: K = ts + z)."""
+    Returns ``[N, C]`` shares.  K must be ≤ ``acc_window(p)`` (one exact
+    int64 window — always true for the protocol's K = ts + z); larger K
+    belongs to the chunked :func:`repro.kernels.modmatmul.modmatmul` path."""
     n, k = vand.shape
     k2, c = terms.shape
     assert k == k2, (vand.shape, terms.shape)
-    if k > 512:
-        raise ValueError("K > 512 needs the chunked modmatmul path")
+    window = acc_window(p)
+    if k > window:
+        raise ValueError(
+            f"K={k} > acc_window({p})={window}: use the chunked modmatmul path")
     bn_, bc_ = min(bn, n), min(bc, c)
     np_, cp = -(-n // bn_) * bn_, -(-c // bc_) * bc_
     vand = jnp.pad(vand.astype(jnp.int64), ((0, np_ - n), (0, 0)))

@@ -21,6 +21,12 @@ def modmatmul_ref(a: jax.Array, b: jax.Array, *, p: int) -> jax.Array:
     return out
 
 
+def modmatmul_batched_ref(a: jax.Array, b: jax.Array, *, p: int) -> jax.Array:
+    """Per-worker ``(a[w] @ b[w]) mod p`` oracle for the batched kernel."""
+    return jax.vmap(lambda x, y: modmatmul_ref(x, y, p=p))(
+        jnp.asarray(a, jnp.int64), jnp.asarray(b, jnp.int64))
+
+
 def polyeval_ref(vand: jax.Array, terms: jax.Array, *, p: int) -> jax.Array:
     return modmatmul_ref(vand, terms, p=p)
 

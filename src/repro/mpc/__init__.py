@@ -1,5 +1,23 @@
-"""Executable CMPC layer: field, Lagrange machinery, 3-phase protocols."""
-from .field import DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31
+"""Executable CMPC layer: field, Lagrange machinery, 3-phase protocols.
+
+Plans (alphas, reconstruction weights, Vandermonde tables) are memoized
+process-wide in :mod:`repro.mpc.planner`; see DESIGN.md §2.
+"""
+from .field import ACC_WINDOW, DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31, acc_window
+from .planner import ProtocolPlan, build_plan, cache_clear, cache_info, get_plan
 from .protocol import AGECMPCProtocol
 
-__all__ = ["DEFAULT_FIELD", "Field", "P_DEFAULT", "P_MERSENNE31", "AGECMPCProtocol"]
+__all__ = [
+    "ACC_WINDOW",
+    "DEFAULT_FIELD",
+    "Field",
+    "P_DEFAULT",
+    "P_MERSENNE31",
+    "acc_window",
+    "AGECMPCProtocol",
+    "ProtocolPlan",
+    "build_plan",
+    "cache_clear",
+    "cache_info",
+    "get_plan",
+]

@@ -25,9 +25,26 @@ import numpy as np
 jax.config.update("jax_enable_x64", True)
 
 P_DEFAULT = 2**26 - 5      # prime; (p-1)^2 * 2048 < 2^63
-P_MERSENNE31 = 2**31 - 1   # prime; needs per-product folds or limb path
-# max #products accumulable in int64 before a fold, per field
-ACC_WINDOW = {P_DEFAULT: 2048, P_MERSENNE31: 1}
+P_MERSENNE31 = 2**31 - 1   # prime; tiny window here; 8-bit limb path on TPU
+
+
+def acc_window(p: int) -> int:
+    """Exact int64 chunk-then-fold window for ``F_p`` (DESIGN.md §3).
+
+    The largest ``q`` such that ``q·(p−1)² + (p−1) < 2⁶³``: a modular
+    accumulator (``< p``) plus ``q`` raw products can never overflow int64.
+    This is the SINGLE source of truth for the accumulation contract —
+    ``ACC_WINDOW`` below, the Pallas kernels' ``bk`` cap
+    (:mod:`repro.kernels.modmatmul`, :mod:`repro.kernels.polyeval`) and the
+    fused protocol path all derive from it.
+    """
+    return max(1, (2**63 - p) // ((p - 1) ** 2))
+
+
+# max #products accumulable in int64 before a fold, per field (derived)
+ACC_WINDOW = {P_DEFAULT: acc_window(P_DEFAULT),
+              P_MERSENNE31: acc_window(P_MERSENNE31)}
+assert ACC_WINDOW[P_DEFAULT] == 2048  # the documented p = 2²⁶−5 contract
 
 
 def is_prime(n: int) -> bool:
@@ -95,7 +112,7 @@ class Field:
 
         ``a: [..., M, K]``, ``b: [..., K, N]`` int64 field elements.
         """
-        window = chunk or ACC_WINDOW.get(self.p, 1)
+        window = chunk or acc_window(self.p)
         a = jnp.asarray(a, jnp.int64)
         b = jnp.asarray(b, jnp.int64)
         k = a.shape[-1]

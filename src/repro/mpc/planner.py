@@ -1,0 +1,265 @@
+"""Cached protocol planning for AGE/Entangled/PolyDot-CMPC (DESIGN.md §2).
+
+A *plan* is everything about one ``Y = AᵀB`` protocol instance that does not
+depend on the data: the degree-set code, the evaluation points α_n, the
+reconstruction weights ``r_n^{(i,l)}`` (eq. (9)), the phase-1 Vandermonde
+tables, the phase-2 G-mix matrix and the default phase-3 decode rows.
+Building a plan costs one Vandermonde table + one Gauss–Jordan inverse per
+α-set candidate — milliseconds with the vectorized :mod:`repro.mpc.lagrange`
+machinery, but still far too much to redo on every ``run``/serve call under
+heavy traffic.
+
+:func:`get_plan` therefore memoizes plans process-wide, keyed by
+``(scheme, s, t, z, lam, field.p, m)``.  Every
+:class:`repro.mpc.protocol.AGECMPCProtocol` instance (and through it
+``secure_matmul`` and the benchmarks) resolves its tables through this
+cache, so repeated protocol instances — e.g. one per serving request —
+share alphas, ``r_coeffs``, Vandermonde tables *and* the jit-compiled fused
+runner instead of recomputing them.  ``cache_info()`` / ``cache_clear()``
+mirror ``functools.lru_cache`` semantics for tests and ops introspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.age import AGECode, GeneralizedPolyCode, optimal_age_code, polydot_code
+from .field import Field
+from .lagrange import (
+    ALPHA_POOL_LIMIT,
+    ALPHA_SEARCH_SEED,
+    ALPHA_SEARCH_TRIES,
+    choose_alphas_with_inverse,
+    inv_mod_ref,
+    matmul_mod,
+    power_table,
+    try_inverse,
+    vandermonde_ref,
+)
+
+PlanKey = Tuple[str, int, int, int, Optional[int], int, int]
+
+
+def _powers_a(code: GeneralizedPolyCode) -> np.ndarray:
+    """Coded power for each (i, j) block of Aᵀ, flattened i-major."""
+    return np.array(
+        [j * code.alpha + i * code.beta for i in range(code.t) for j in range(code.s)],
+        dtype=np.int64,
+    )
+
+
+def _powers_b(code: GeneralizedPolyCode) -> np.ndarray:
+    """Coded power for each (k, l) block of B, flattened k-major."""
+    return np.array(
+        [(code.s - 1 - k) * code.alpha + code.theta * l
+         for k in range(code.s) for l in range(code.t)],
+        dtype=np.int64,
+    )
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics (ndarray fields;
+class ProtocolPlan:               # the cache's contract is `is`, not `==`)
+    """Data-independent tables for one protocol instance (all int64 numpy)."""
+
+    scheme: str
+    s: int
+    t: int
+    z: int
+    m: int
+    p: int
+    code: GeneralizedPolyCode
+    alphas: np.ndarray          # [N] evaluation points
+    powers_h: np.ndarray        # [N] sorted support of H(x)
+    r_coeffs: np.ndarray        # [t², N]  eq. (9) rows, u = i + t·l
+    vand_a: np.ndarray          # [N, ts+z] phase-1 F_A table
+    vand_b: np.ndarray          # [N, ts+z] phase-1 F_B table
+    g_mix: np.ndarray           # [N, N']  phase-2 H→G mixing scalars
+    vand_g_secret: np.ndarray   # [N, z]   phase-2 mask table
+    decode_rows: np.ndarray     # [t², t²+z] default (all-alive) decode rows
+
+    # lazily-attached compiled runners, keyed by backend name — shared by
+    # every protocol instance that resolves to this plan
+    _runners: Dict[str, Callable] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _runner_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.alphas)
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.t * self.t + self.z
+
+    def runner(self, kind: str, build: Callable[[], Callable]) -> Callable:
+        """Get-or-build a compiled runner attached to this plan.
+
+        Locked so concurrent first-callers (one protocol instance per
+        serving request) pay the jit compile once, like the plan cache."""
+        fn = self._runners.get(kind)
+        if fn is None:
+            with self._runner_lock:
+                fn = self._runners.get(kind)
+                if fn is None:
+                    fn = self._runners[kind] = build()
+        return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_code(scheme: str, s: int, t: int, z: int,
+                  lam: Optional[int]) -> GeneralizedPolyCode:
+    if scheme == "age":
+        if lam is None:
+            return optimal_age_code(s, t, z)[0]
+        return AGECode(s, t, z, lam)
+    if scheme == "entangled":
+        return AGECode(s, t, z, lam=0)
+    if scheme == "polydot":
+        return polydot_code(s, t, z)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def build_plan(scheme: str, s: int, t: int, z: int, lam: Optional[int],
+               field: Field, m: int, *, use_reference: bool = False) -> ProtocolPlan:
+    """Construct a plan from scratch (no cache).
+
+    ``use_reference=True`` rebuilds with the original interpreted lagrange
+    implementations (object-dtype Gauss–Jordan, per-element ``pow``
+    Vandermonde, and the seed's separate invert-to-check + invert-to-solve
+    structure).  It exists as the bit-exactness oracle and the baseline leg
+    of the plan-construction speedup pair in ``benchmarks/protocol_bench.py``.
+    """
+    code = _resolve_code(scheme, s, t, z, lam)
+    p = field.p
+    n = code.n_workers
+    powers_h = np.array(sorted(code.powers_h), dtype=np.int64)
+    t2 = t * t
+    t2z = t2 + z
+    pw_a = np.concatenate(
+        [_powers_a(code), np.array(sorted(code.secret_powers_a), np.int64)])
+    pw_b = np.concatenate(
+        [_powers_b(code), np.array(sorted(code.secret_powers_b), np.int64)])
+    max_pow = int(max(powers_h.max(), pw_a.max(), pw_b.max(), t2z - 1))
+
+    # ---- α-set search: invertibility check and solve share one elimination
+    table = None
+    if use_reference:
+        # seed structure: check-invert, then re-build + solve-invert (the
+        # honest baseline cost), over the same shared search constants
+        rng = np.random.default_rng(ALPHA_SEARCH_SEED)
+        alphas = np.arange(1, n + 1, dtype=np.int64)
+        w = None
+        for _ in range(ALPHA_SEARCH_TRIES):
+            try:
+                inv_mod_ref(field, vandermonde_ref(field, alphas, powers_h))
+                w = inv_mod_ref(field, vandermonde_ref(field, alphas, powers_h))
+                break
+            except np.linalg.LinAlgError:
+                alphas = rng.choice(
+                    np.arange(1, min(p, ALPHA_POOL_LIMIT), dtype=np.int64),
+                    size=n, replace=False)
+        if w is None:
+            raise RuntimeError(
+                f"no invertible α-set found in {ALPHA_SEARCH_TRIES} tries")
+    else:
+        holder = {}
+
+        def _table_slice(f, cand, pw):
+            holder["table"] = tbl = power_table(f, cand, max_pow)
+            return tbl[:, np.asarray(pw, np.int64)]
+
+        alphas, w = choose_alphas_with_inverse(
+            field, n, powers_h, vand_fn=_table_slice)
+        table = holder["table"]
+
+    def vand(al_rows, pw):
+        """α^pw table: a column slice of the shared power table (fast path)
+        or a fresh per-element build (reference path).  ``al_rows`` is a
+        row count into ``alphas`` (prefix) to keep slicing trivial."""
+        if use_reference:
+            return vandermonde_ref(field, alphas[:al_rows], pw)
+        return table[:al_rows, np.asarray(pw, np.int64)]
+
+    # ---- r_coeffs: rows of V⁻¹ at the important powers, ordered u = i + t·l
+    pow_to_idx = {int(pw): k for k, pw in enumerate(powers_h)}
+    rows = [
+        w[pow_to_idx[(code.s - 1) * code.alpha + i * code.beta + code.theta * l]]
+        for l in range(t) for i in range(t)
+    ]
+    r_coeffs = np.stack(rows).astype(np.int64)
+
+    # ---- phase-1 share tables (coded powers then secret powers)
+    vand_a = vand(n, pw_a)
+    vand_b = vand(n, pw_b)
+
+    # ---- phase-2 G-mix: c[n, n'] = Σ_u r_n^u · α_{n'}^u  (eq. (10), 1st sum)
+    vg = vand(n, np.arange(t2, dtype=np.int64))                 # [N', t²]
+    if use_reference:
+        g_mix = ((r_coeffs.astype(object).T @ vg.astype(object).T)
+                 % p).astype(np.int64)
+    else:
+        g_mix = matmul_mod(r_coeffs.T, vg.T, p)                  # [N, N']
+    vand_g_secret = vand(n, np.array([t2 + w_ for w_ in range(z)], np.int64))
+
+    # ---- default phase-3 decode: first t²+z workers, coefficients 0..t²-1
+    v_dec = vand(t2z, np.arange(t2z, dtype=np.int64))
+    if use_reference:
+        decode_rows = inv_mod_ref(field, v_dec)[:t2]
+    else:
+        w_dec = try_inverse(field, v_dec)
+        if w_dec is None:  # cannot happen: plain Vandermonde, distinct α's
+            raise np.linalg.LinAlgError("singular decode system")
+        decode_rows = w_dec[:t2]
+
+    return ProtocolPlan(
+        scheme=scheme, s=s, t=t, z=z, m=m, p=p, code=code,
+        alphas=alphas, powers_h=powers_h, r_coeffs=r_coeffs,
+        vand_a=vand_a, vand_b=vand_b, g_mix=g_mix,
+        vand_g_secret=vand_g_secret, decode_rows=decode_rows.astype(np.int64),
+    )
+
+
+# ----------------------------------------------------------------- the cache
+_CACHE: Dict[PlanKey, ProtocolPlan] = {}
+_LOCK = threading.Lock()
+_HITS = 0
+_MISSES = 0
+
+
+def get_plan(scheme: str, s: int, t: int, z: int, lam: Optional[int],
+             field: Field, m: int) -> ProtocolPlan:
+    """Memoized :func:`build_plan` — the entry point protocols use."""
+    global _HITS, _MISSES
+    key: PlanKey = (scheme, s, t, z, lam, field.p, m)
+    with _LOCK:
+        plan = _CACHE.get(key)
+        if plan is not None:
+            _HITS += 1
+            return plan
+    built = build_plan(scheme, s, t, z, lam, field, m)
+    with _LOCK:
+        plan = _CACHE.get(key)
+        if plan is not None:  # lost a benign build race: keep the first
+            _HITS += 1
+            return plan
+        _MISSES += 1
+        _CACHE[key] = built
+    return built
+
+
+def cache_info() -> Dict[str, int]:
+    with _LOCK:
+        return {"hits": _HITS, "misses": _MISSES, "size": len(_CACHE)}
+
+
+def cache_clear() -> None:
+    global _HITS, _MISSES
+    with _LOCK:
+        _CACHE.clear()
+        _HITS = 0
+        _MISSES = 0

@@ -13,6 +13,16 @@ Two runners:
 Straggler / fault tolerance: phase 3 decodes from ANY ``t²+z`` surviving
 workers (coded redundancy = the paper's headline property, exposed here as
 ``decode(..., survivors=mask)``).
+
+Fast path (DESIGN.md §2-§3): all data-independent tables come from the
+process-wide :mod:`repro.mpc.planner` cache, and ``run`` defaults to a
+single jit-compiled program covering all three phases — chunk-then-fold
+matmuls with Barrett reduction (:mod:`repro.kernels.barrett`) instead of
+per-op ``einsum … % p``.  ``mode="reference"`` keeps the original eager
+phase-by-phase path (the bit-exactness oracle and benchmark baseline);
+``mode="pallas"`` routes the heavy phases through the Pallas kernels
+(:mod:`repro.kernels.modmatmul`, :mod:`repro.kernels.polyeval`) — interpret
+mode on CPU, the real tiled programs on TPU.
 """
 from __future__ import annotations
 
@@ -24,31 +34,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.age import AGECode, GeneralizedPolyCode, optimal_age_code, polydot_code
-from .field import DEFAULT_FIELD, Field
-from .lagrange import (
-    choose_alphas,
-    inv_mod,
-    reconstruction_weights,
-    vandermonde,
-)
-
-
-def _powers_a(code: GeneralizedPolyCode) -> np.ndarray:
-    """Coded power for each (i, j) block of Aᵀ, flattened i-major."""
-    return np.array(
-        [j * code.alpha + i * code.beta for i in range(code.t) for j in range(code.s)],
-        dtype=np.int64,
-    )
-
-
-def _powers_b(code: GeneralizedPolyCode) -> np.ndarray:
-    """Coded power for each (k, l) block of B, flattened k-major."""
-    return np.array(
-        [(code.s - 1 - k) * code.alpha + code.theta * l
-         for k in range(code.s) for l in range(code.t)],
-        dtype=np.int64,
-    )
+from ..core.age import GeneralizedPolyCode
+from ..kernels.barrett import matmul_folded, matmul_limbs, mod_p
+from .field import DEFAULT_FIELD, Field, acc_window
+from .lagrange import inv_mod, vandermonde
+from .planner import ProtocolPlan, get_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +52,12 @@ class AGECMPCProtocol:
     m    : matrix side
     lam  : AGE gap; ``None`` solves ``min_λ`` (eq. (13))
     scheme : "age" | "entangled" | "polydot"
+
+    All data-independent tables (``alphas``, ``r_coeffs``, Vandermonde
+    tables, decode rows) resolve through the shared
+    :func:`repro.mpc.planner.get_plan` cache: constructing many protocol
+    instances with the same parameters — one per request under serving
+    traffic — costs one plan build total.
     """
 
     s: int
@@ -78,92 +74,67 @@ class AGECMPCProtocol:
 
     # ------------------------------------------------------------------ plan
     @cached_property
+    def plan(self) -> ProtocolPlan:
+        """The cached data-independent tables (shared across instances)."""
+        return get_plan(self.scheme, self.s, self.t, self.z, self.lam,
+                        self.field, self.m)
+
+    @property
     def code(self) -> GeneralizedPolyCode:
-        if self.scheme == "age":
-            if self.lam is None:
-                return optimal_age_code(self.s, self.t, self.z)[0]
-            return AGECode(self.s, self.t, self.z, self.lam)
-        if self.scheme == "entangled":
-            return AGECode(self.s, self.t, self.z, lam=0)
-        if self.scheme == "polydot":
-            return polydot_code(self.s, self.t, self.z)
-        raise ValueError(f"unknown scheme {self.scheme!r}")
+        return self.plan.code
 
     @property
     def n_workers(self) -> int:
-        return self.code.n_workers
+        return self.plan.n_workers
 
     @property
     def recovery_threshold(self) -> int:
-        return self.code.recovery_threshold
+        return self.plan.recovery_threshold
 
-    @cached_property
+    @property
     def powers_h(self) -> np.ndarray:
-        return np.array(sorted(self.code.powers_h), dtype=np.int64)
+        return self.plan.powers_h
 
-    @cached_property
+    @property
     def alphas(self) -> np.ndarray:
         """Evaluation points: α_n = n when that yields invertible systems."""
-        return choose_alphas(self.field, self.n_workers, list(self.powers_h))
+        return self.plan.alphas
 
-    @cached_property
+    @property
     def r_coeffs(self) -> np.ndarray:
         """r_n^{(i,l)} of eq. (9): [t², N], row u=i+t·l extracts H_{imp(i,l)}."""
-        w = reconstruction_weights(self.field, self.alphas, list(self.powers_h))
-        # important power for (i,l): (s-1)α + iβ + θl, ordered u = i + t·l
-        pow_to_idx = {int(pw): k for k, pw in enumerate(self.powers_h)}
-        rows = []
-        c = self.code
-        for l in range(self.t):
-            for i in range(self.t):
-                imp = (c.s - 1) * c.alpha + i * c.beta + c.theta * l
-                rows.append(w[pow_to_idx[imp]])
-        out = np.stack(rows)  # ordered l-major => index u = i + t*l at [u]
-        # reorder to u = i + t*l: rows currently appended l-major with i inner,
-        # i.e. position l*t + i == t*l + i == u. Already correct.
-        return out.astype(np.int64)
+        return self.plan.r_coeffs
 
-    @cached_property
+    @property
     def vand_a(self) -> np.ndarray:
         """[N, t·s + z] powers of α_n for F_A terms (coded then secret)."""
-        pw = np.concatenate(
-            [_powers_a(self.code),
-             np.array(sorted(self.code.secret_powers_a), dtype=np.int64)])
-        return vandermonde(self.field, self.alphas, pw)
+        return self.plan.vand_a
 
-    @cached_property
+    @property
     def vand_b(self) -> np.ndarray:
-        pw = np.concatenate(
-            [_powers_b(self.code),
-             np.array(sorted(self.code.secret_powers_b), dtype=np.int64)])
-        return vandermonde(self.field, self.alphas, pw)
+        return self.plan.vand_b
 
-    @cached_property
+    @property
     def g_mix(self) -> np.ndarray:
         """c[n, n'] = Σ_{i,l} r_n^{(i,l)}·α_{n'}^{i+t·l} mod p  -- the scalar
         that multiplies H(α_n) inside G_n(α_{n'}) (first sum of eq. (10))."""
-        t2 = self.t * self.t
-        vg = vandermonde(self.field, self.alphas, list(range(t2)))  # [N', t²]
-        acc = (self.r_coeffs.astype(object).T @ vg.astype(object).T) % self.field.p
-        return acc.astype(np.int64)  # [n, n']
+        return self.plan.g_mix
 
-    @cached_property
+    @property
     def vand_g_secret(self) -> np.ndarray:
         """α_{n'}^{t²+w} for w < z (second sum of eq. (10)): [N, z]."""
-        t2 = self.t * self.t
-        return vandermonde(self.field, self.alphas,
-                           [t2 + w for w in range(self.z)])
+        return self.plan.vand_g_secret
 
     # -------------------------------------------------------------- phase 1
     def _split_a(self, a):
-        """Aᵀ -> [t·s, m/t, m/s] blocks, i-major (matches _powers_a)."""
+        """Aᵀ -> [t·s, m/t, m/s] blocks, i-major (matches planner powers)."""
         t, s, m = self.t, self.s, self.m
         at = jnp.asarray(a, jnp.int64).T
         blocks = at.reshape(t, m // t, s, m // s).transpose(0, 2, 1, 3)
         return blocks.reshape(t * s, m // t, m // s)
 
     def _split_b(self, b):
-        """B -> [s·t, m/s, m/t] blocks, k-major (matches _powers_b)."""
+        """B -> [s·t, m/s, m/t] blocks, k-major (matches planner powers)."""
         t, s, m = self.t, self.s, self.m
         b = jnp.asarray(b, jnp.int64)
         blocks = b.reshape(s, m // s, t, m // t).transpose(0, 2, 1, 3)
@@ -187,8 +158,20 @@ class AGECMPCProtocol:
         return f_a, f_b
 
     # -------------------------------------------------------------- phase 2
-    def phase2_compute(self, f_a, f_b):
-        """Each worker: H(α_n) = F_A(α_n)·F_B(α_n) mod p  (the hot loop)."""
+    def phase2_compute(self, f_a, f_b, *, use_kernel: bool = False,
+                       interpret: Optional[bool] = None):
+        """Each worker: H(α_n) = F_A(α_n)·F_B(α_n) mod p  (the hot loop).
+
+        ``use_kernel=True`` routes through the batched Pallas kernel (all N
+        workers in one ``pallas_call``, worker index = grid dim 0);
+        ``interpret=None`` auto-selects interpret mode off-TPU."""
+        if use_kernel:
+            from ..kernels.modmatmul import modmatmul_batched
+            if interpret is None:
+                interpret = jax.default_backend() == "cpu"
+            return modmatmul_batched(
+                jnp.asarray(f_a, jnp.int64), jnp.asarray(f_b, jnp.int64),
+                p=self.field.p, interpret=interpret)
         return self.field.matmul(f_a, f_b)
 
     def phase2_exchange(self, h, key):
@@ -222,24 +205,153 @@ class AGECMPCProtocol:
             raise RuntimeError(
                 f"only {len(idx)} workers alive < threshold {t2z}")
         idx = idx[:t2z]
-        v = vandermonde(self.field, self.alphas[idx], list(range(t2z)))
-        w = inv_mod(self.field, v)[: self.t * self.t]       # coeffs 0..t²-1
+        if survivors is None:
+            w = self.plan.decode_rows                      # precomputed
+        else:
+            v = vandermonde(self.field, self.alphas[idx], list(range(t2z)))
+            w = inv_mod(self.field, v)[: self.t * self.t]  # coeffs 0..t²-1
         i_sel = jnp.asarray(i_points)[jnp.asarray(idx)]
-        y_blocks = jnp.einsum("kn,nrc->krc", jnp.asarray(w), i_sel) % self.field.p
-        # u = i + t·l  ->  block row i, block col l of Y
         t, mt = self.t, self.m // self.t
+        # window-safe fold (a single-fold einsum overflows for small-window
+        # primes like Mersenne-31); identical values for the default prime
+        y_blocks = matmul_folded(
+            jnp.asarray(w), i_sel.reshape(t2z, -1),
+            p=self.field.p, window=acc_window(self.field.p))
+        # u = i + t·l  ->  block row i, block col l of Y
         grid = y_blocks.reshape(t, t, mt, mt)       # [l, i, r, c]
         y = grid.transpose(1, 2, 0, 3).reshape(self.m, self.m)
         return y
 
     # ------------------------------------------------------------------ run
-    def run(self, a, b, key, *, survivors: Optional[np.ndarray] = None):
-        """All three phases; returns Y = AᵀB mod p."""
+    def run(self, a, b, key, *, survivors: Optional[np.ndarray] = None,
+            mode: str = "fused"):
+        """All three phases; returns Y = AᵀB mod p.
+
+        ``mode`` selects the execution path (bit-identical where defined):
+
+        * ``"fused"`` (default) — one jit-compiled program for all three
+          phases, Barrett-folded matmuls, decode rows from the plan cache.
+          Exact for any supported prime (chunked to the field window).
+        * ``"pallas"`` — heavy phases through the Pallas kernels (interpret
+          mode on CPU; the tiled VMEM programs on TPU).
+        * ``"reference"`` — the original eager phase-by-phase path.
+
+        The reference and pallas paths accumulate whole term/worker sums in
+        one int64 window, so they require ``acc_window(p) ≥ max(ts+z, N)``
+        — true for the default prime, NOT for Mersenne-31 (window 2).
+        They raise a descriptive error rather than silently overflow
+        (DESIGN.md §3); use the fused default for small-window fields.
+
+        A non-default ``survivors`` mask always takes the reference decode
+        (the survivor subset changes the phase-3 solve).
+        """
+        if mode not in ("fused", "pallas", "reference"):
+            raise ValueError(
+                f"unknown mode {mode!r}: expected fused|pallas|reference")
+        if survivors is None and mode == "fused":
+            runner = self.plan.runner(
+                "fused", lambda: _build_fused_runner(self.plan))
+            return runner(jnp.asarray(a, jnp.int64), jnp.asarray(b, jnp.int64),
+                          key)
+        if survivors is None and mode == "pallas":
+            return self._run_pallas(a, b, key)
+        return self.run_reference(a, b, key, survivors=survivors)
+
+    def run_reference(self, a, b, key, *,
+                      survivors: Optional[np.ndarray] = None):
+        """The pre-fast-path eager pipeline (oracle / benchmark baseline).
+
+        Faithful to the seed implementation end to end, including its
+        per-call phase-3 Vandermonde solve with the interpreted lagrange
+        machinery — this is the baseline leg of the fused-vs-baseline pairs
+        ``benchmarks/protocol_bench.py`` records.
+
+        Exactness precondition: the eager einsums fold once after summing
+        all ``ts+z`` terms (phase 1) / all ``N`` workers (phase 2), so the
+        field window must cover those extents; guarded here instead of
+        silently overflowing for small-window primes (Mersenne-31).
+        """
+        self._require_window("run_reference (mode='reference')")
         k1, k2 = jax.random.split(key)
         f_a, f_b = self.phase1_shares(a, b, k1)
         h = self.phase2_compute(f_a, f_b)
         i_pts = self.phase2_exchange(h, k2)
-        return self.decode(i_pts, survivors)
+        return self._decode_seed(i_pts, survivors)
+
+    def _decode_seed(self, i_points, survivors: Optional[np.ndarray] = None):
+        """Seed-faithful decode: rebuilds and inverts the survivor system
+        with the interpreted (object-dtype) lagrange implementations."""
+        from .lagrange import inv_mod_ref, vandermonde_ref
+
+        t2z = self.recovery_threshold
+        alive = (np.ones(self.n_workers, bool) if survivors is None
+                 else np.asarray(survivors, bool))
+        idx = np.nonzero(alive)[0]
+        if len(idx) < t2z:
+            raise RuntimeError(
+                f"only {len(idx)} workers alive < threshold {t2z}")
+        idx = idx[:t2z]
+        v = vandermonde_ref(self.field, self.alphas[idx], list(range(t2z)))
+        w = inv_mod_ref(self.field, v)[: self.t * self.t]
+        i_sel = jnp.asarray(i_points)[jnp.asarray(idx)]
+        y_blocks = jnp.einsum("kn,nrc->krc", jnp.asarray(w), i_sel) % self.field.p
+        t, mt = self.t, self.m // self.t
+        grid = y_blocks.reshape(t, t, mt, mt)       # [l, i, r, c]
+        return grid.transpose(1, 2, 0, 3).reshape(self.m, self.m)
+
+    def _require_window(self, what: str) -> None:
+        """Raise if the field's int64 window can't cover this path's
+        single-fold accumulations (ts+z phase-1 terms, N exchange terms)."""
+        need = max(self.s * self.t + self.z, self.n_workers)
+        win = acc_window(self.field.p)
+        if win < need:
+            raise ValueError(
+                f"{what} folds {need} products in one int64 window but "
+                f"acc_window({self.field.p})={win}; use the default fused "
+                "mode for small-window fields (DESIGN.md §3)")
+
+    def _run_pallas(self, a, b, key, *, interpret: Optional[bool] = None):
+        """Phases 1-3 through the Pallas kernels (bit-exact with ``run``).
+
+        ``interpret=None`` auto-selects: the compiled block programs on
+        TPU, interpret mode elsewhere (this container is CPU-only).  Same
+        window precondition as the reference path: the polyeval kernel
+        keeps K fully resident with one fold at the end.
+        """
+        self._require_window("mode='pallas' (single-fold polyeval)")
+        from ..kernels.polyeval import polyeval
+
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+
+        p = self.field.p
+        t, z, m = self.t, self.z, self.m
+        mt, ms = m // t, m // self.s
+        n, t2z = self.n_workers, self.recovery_threshold
+        k1, k2 = jax.random.split(key)
+        ka, kb = jax.random.split(k1)
+        sec_a = self.field.random(ka, (z, mt, ms))
+        sec_b = self.field.random(kb, (z, ms, mt))
+        terms_a = jnp.concatenate([self._split_a(a), sec_a]).reshape(-1, mt * ms)
+        terms_b = jnp.concatenate([self._split_b(b), sec_b]).reshape(-1, ms * mt)
+        f_a = polyeval(jnp.asarray(self.vand_a), terms_a, p=p,
+                       interpret=interpret).reshape(n, mt, ms)
+        f_b = polyeval(jnp.asarray(self.vand_b), terms_b, p=p,
+                       interpret=interpret).reshape(n, ms, mt)
+        h = self.phase2_compute(f_a, f_b, use_kernel=True,
+                                interpret=interpret)
+        r_mask = self.field.random(k2, (n, z, mt, mt))
+        i_pts = polyeval(jnp.asarray(self.g_mix.T.copy()),
+                         h.reshape(n, mt * mt), p=p, interpret=interpret)
+        mask_sum = mod_p(jnp.sum(r_mask, axis=0), p)
+        i_pts = mod_p(
+            i_pts + polyeval(jnp.asarray(self.vand_g_secret),
+                             mask_sum.reshape(z, mt * mt), p=p,
+                             interpret=interpret), p)
+        y_blocks = polyeval(jnp.asarray(self.plan.decode_rows), i_pts[:t2z],
+                            p=p, interpret=interpret)
+        grid = y_blocks.reshape(t, t, mt, mt)
+        return grid.transpose(1, 2, 0, 3).reshape(m, m)
 
     # ------------------------------------------------------------- privacy
     def check_privacy_structure(self, n_subsets: int = 32, seed: int = 0) -> None:
@@ -261,6 +373,70 @@ class AGECMPCProtocol:
             for pw in (sec_a, sec_b):
                 v = vandermonde(self.field, al, pw)
                 inv_mod(self.field, v)  # raises LinAlgError if singular
+
+
+def _build_fused_runner(plan: ProtocolPlan):
+    """Compile the all-three-phases program for one plan (DESIGN.md §3).
+
+    Bit-exactness: the *output* Y is identical to ``run_reference`` on every
+    input.  The phase-1 secrets replicate the reference draws exactly; the
+    phase-2 masks differ in *how* they are drawn — legitimate because the
+    mask polynomial's contribution to the decoded coefficients is
+    ``(V⁻¹V)[0:t², t²:t²+z] ≡ 0``: it cancels *identically* in F_p, so any
+    mask values yield the same Y.  The single-process simulation only ever
+    consumes the masks through their sum ``Σ_n R^{(n)}_w`` (see
+    ``phase2_exchange``), so the fused program draws that aggregate
+    directly via raw bits mod p (the sharded runner's ``prg_masks``
+    optimization) instead of materializing N per-worker tensors.  Matmuls
+    run limb-decomposed over exact f64 GEMM
+    (:func:`repro.kernels.barrett.matmul_limbs`) where the K extent makes
+    3 GEMMs cheaper than scalar int64 MACs, chunk-then-fold int64 otherwise.
+    """
+    p, s, t, z, m = plan.p, plan.s, plan.t, plan.z, plan.m
+    mt, ms = m // t, m // s
+    n, t2z = plan.n_workers, plan.recovery_threshold
+    win = acc_window(p)
+
+    def mm(x, y):
+        # crossover (measured, m=144/N=17): limb recombination costs ~10
+        # elementwise passes; the int64 dot costs K scalar-MAC passes.
+        # Only the phase-2 worker product (K = m/t) clears the bar.
+        if p.bit_length() <= 31 and x.shape[-1] > 32:
+            return matmul_limbs(x, y, p=p)
+        return matmul_folded(x, y, p=p, window=win)
+    va = jnp.asarray(plan.vand_a)
+    vb = jnp.asarray(plan.vand_b)
+    gm_t = jnp.asarray(plan.g_mix.T.copy())       # [n', n]
+    vg = jnp.asarray(plan.vand_g_secret)          # [n', z]
+    dec = jnp.asarray(plan.decode_rows)           # [t², t²+z]
+
+    def run(a, b, key):
+        k1, k2 = jax.random.split(key)
+        ka, kb = jax.random.split(k1)
+        sec_a = jax.random.randint(ka, (z, mt, ms), 0, p, dtype=jnp.int64)
+        sec_b = jax.random.randint(kb, (z, ms, mt), 0, p, dtype=jnp.int64)
+        at = a.T.reshape(t, mt, s, ms).transpose(0, 2, 1, 3)
+        blocks_a = at.reshape(t * s, mt, ms)
+        blocks_b = b.reshape(s, ms, t, mt).transpose(0, 2, 1, 3).reshape(
+            s * t, ms, mt)
+        terms_a = jnp.concatenate([blocks_a, sec_a]).reshape(-1, mt * ms)
+        terms_b = jnp.concatenate([blocks_b, sec_b]).reshape(-1, ms * mt)
+        # phase 1: shares for all N workers (one folded matmul each)
+        f_a = mm(va, terms_a).reshape(n, mt, ms)
+        f_b = mm(vb, terms_b).reshape(n, ms, mt)
+        # phase 2 compute: every worker's H(α_n), batched over n
+        h = mm(f_a, f_b)                                      # [n, mt, mt]
+        # phase 2 exchange: G-mix + z mask polynomials (aggregate mask draw)
+        mask_sum = (jax.random.bits(k2, (z, mt, mt), jnp.uint64)
+                    % jnp.uint64(p)).astype(jnp.int64)
+        i_pts = mm(gm_t, h.reshape(n, mt * mt))
+        i_pts = mod_p(i_pts + mm(vg, mask_sum.reshape(z, mt * mt)), p)
+        # phase 3: default all-alive decode (precomputed V⁻¹ rows)
+        y_blocks = mm(dec, i_pts[:t2z])
+        grid = y_blocks.reshape(t, t, mt, mt)                 # [l, i, r, c]
+        return grid.transpose(1, 2, 0, 3).reshape(m, m)
+
+    return jax.jit(run)
 
 
 def expected_overheads(proto: AGECMPCProtocol) -> dict:

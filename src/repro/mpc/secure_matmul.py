@@ -8,7 +8,12 @@ contributions to every I(α_{n'}) and receives back only its own n' chunk.
 That is the TPU-native form of the paper's all-pairs exchange (DESIGN.md §3).
 
 ``secure_matmul`` is the composable entry point used by the model zoo's MPC
-mode: float in, float out, everything in between in F_p.
+mode: float in, float out, everything in between in F_p.  Protocol plans
+(alphas, Vandermonde tables, G-mix) resolve through the process-wide
+:mod:`repro.mpc.planner` cache (DESIGN.md §2), so repeated sharded or
+single-process instances of the same parameterization never rebuild them;
+the single-process path additionally reuses a per-plan jit-compiled fused
+runner (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..parallel.compat import shard_map
 from .field import Field
 from .protocol import AGECMPCProtocol
 
@@ -179,7 +185,7 @@ class ShardedCMPC:
                     g_all, axis, scatter_dimension=0, tiled=True)
                 return i_local % p
 
-            return jax.shard_map(
+            return shard_map(
                 local,
                 mesh=self.mesh,
                 in_specs=(spec_w, spec_w, P(axis, None), spec_r,

@@ -1,0 +1,15 @@
+"""Version-compatible imports for JAX APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax.shard_map`` namespace; depending on the pinned JAX only one of the two
+exists.  Import it from here everywhere (library code and test subprocess
+snippets) so the repo runs on both sides of the move.
+"""
+from __future__ import annotations
+
+try:  # modern JAX: top-level API
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+__all__ = ["shard_map"]

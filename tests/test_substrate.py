@@ -125,6 +125,7 @@ def test_compressed_psum_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.parallel.compat import shard_map
         from repro.parallel.compressed import compressed_psum
 
         mesh = jax.make_mesh((4,), ("pod",))
@@ -134,8 +135,8 @@ def test_compressed_psum_subprocess():
             return out["g"], err["g"]
 
         g = jnp.arange(32.0).reshape(4, 8) / 7.3
-        fm = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", None),
-                              out_specs=(P("pod", None), P("pod", None))))
+        fm = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                               out_specs=(P("pod", None), P("pod", None))))
         out, err = fm(g)
         # mean over 4 shards, int8-quantized: close to true mean
         true = np.repeat(np.asarray(g).mean(0, keepdims=True), 4, 0)
