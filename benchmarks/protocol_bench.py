@@ -8,6 +8,16 @@ default fused ``run`` and the seed-faithful ``run_reference`` — and the
 (see :func:`benchmarks.common.write_trajectory`).  Plan construction gets
 the same treatment: vectorized Montgomery/int64 build vs the interpreted
 object-dtype build, at N = 17 and N = 47.
+
+The elastic-engine refactor (DESIGN.md §5) adds two more pair families:
+
+* **survivor decode** — the staged fused path with a dropout mask vs the
+  seed's eager pipeline + per-call object-dtype survivor solve, plus the
+  decode stage alone (cached survivor table vs seed decode) and the
+  survivor-table LRU itself (hit vs cold Gauss–Jordan solve);
+* **batched serving** — ``MPCEngine`` flushes (one vmapped program per
+  plan group) vs a sequential per-request ``run`` loop, at batch sizes
+  1 / 4 / 16, with requests/s in the derived column.
 """
 from __future__ import annotations
 
@@ -18,7 +28,7 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import emit, emit_pair, time_us, write_trajectory  # noqa: E402
+from benchmarks.common import emit_pair, time_us, write_trajectory  # noqa: E402
 from repro.core.overheads import overheads  # noqa: E402
 from repro.mpc import AGECMPCProtocol  # noqa: E402
 from repro.mpc.field import DEFAULT_FIELD  # noqa: E402
@@ -54,19 +64,101 @@ def main():
         emit_pair(records, f"plan_build_N{n}", us_new, us_ref,
                   f"s={ps};t={pt};z={pz}")
 
-    # straggler decode at exactly the threshold
+    # ---- survivor paths: staged fused vs the seed pipeline ---------------
     proto = AGECMPCProtocol(s=s, t=t, z=z, m=m)
     a = rng.integers(0, proto.field.p, (m, m))
     b = rng.integers(0, proto.field.p, (m, m))
-    surv = np.zeros(proto.n_workers, bool)
-    surv[np.random.default_rng(1).choice(
-        proto.n_workers, proto.recovery_threshold, replace=False)] = True
-    us = time_us(proto.run, a, b, jax.random.PRNGKey(1),
-                 survivors=surv, iters=2, warmup=1)
-    emit(f"cmpc_age_straggler_m{m}", us,
-         f"decode-from-{proto.recovery_threshold}-of-{proto.n_workers}")
+    n, t2z = proto.n_workers, proto.recovery_threshold
+    surv = np.zeros(n, bool)
+    surv[np.random.default_rng(1).choice(n, t2z, replace=False)] = True
+    key = jax.random.PRNGKey(1)
+    us_fused = time_us(proto.run, a, b, key, survivors=surv,
+                       iters=5, warmup=2, best_of=3)
+    us_seed = time_us(proto.run_reference, a, b, key, survivors=surv,
+                      iters=2, warmup=1)
+    emit_pair(records, f"cmpc_age_survivor_run_m{m}", us_fused, us_seed,
+              f"decode-from-{t2z}-of-{n}")
+
+    # decode stage alone: cached survivor table vs the seed's per-call
+    # object-dtype Vandermonde rebuild + inversion
+    k1, k2 = jax.random.split(key)
+    f_a, f_b = proto.phase1_shares(a, b, k1)
+    i_pts = proto.phase2_exchange(proto.phase2_compute(f_a, f_b), k2)
+    us_cached = time_us(proto.decode, i_pts, surv,
+                        iters=10, warmup=2, best_of=3)
+    us_seed_dec = time_us(proto._decode_seed, i_pts, surv, iters=2, warmup=1)
+    emit_pair(records, f"survivor_decode_cached_m{m}", us_cached, us_seed_dec,
+              f"decode-from-{t2z}-of-{n}")
+
+    # the survivor-table LRU itself: hit vs cold Gauss–Jordan solve
+    plan = proto.plan
+    rng2 = np.random.default_rng(2)
+    fresh = iter({tuple(sorted(rng2.choice(n, t2z, replace=False).tolist()))
+                  for _ in range(128)} - set([tuple(range(t2z))]))
+    us_cold = time_us(lambda: plan.survivor_rows(next(fresh)),
+                      iters=16, warmup=4)
+    hot = tuple(sorted(np.random.default_rng(3).choice(
+        n, t2z, replace=False).tolist()))
+    us_hot = time_us(plan.survivor_rows, hot, iters=32, warmup=2, best_of=3)
+    emit_pair(records, f"survivor_table_N{n}", us_hot, us_cold,
+              "LRU-hit-vs-cold-solve")
+
+    # ---- batched engine: one vmapped program per plan group --------------
+    # two request sizes: small-m is dispatch-bound (where grouping pays on
+    # CPU), large-m is compute-bound (where the vmapped program matters on
+    # accelerators); req/s vs batch size lands in the derived column
+    from repro.mpc.engine import MPCEngine
+
+    eng = MPCEngine(max_batch=16)
+    for em in (48, m):
+        eproto = AGECMPCProtocol(s=s, t=t, z=z, m=em)
+        for bs in (1, 4, 16):
+            reqs = [(rng.integers(0, eproto.field.p, (em, em)),
+                     rng.integers(0, eproto.field.p, (em, em)),
+                     jax.random.PRNGKey(i)) for i in range(bs)]
+
+            def serve_batched():
+                for aa, bb, k in reqs:
+                    eng.submit(aa, bb, key=k, s=s, t=t, z=z, m=em)
+                return eng.flush()
+
+            def serve_sequential():
+                return [np.asarray(eproto.run(aa, bb, k))
+                        for aa, bb, k in reqs]
+
+            us_batch = time_us(serve_batched, iters=3, warmup=1, best_of=2)
+            us_seq = time_us(serve_sequential, iters=3, warmup=1, best_of=2)
+            emit_pair(records, f"engine_batch{bs}_m{em}", us_batch, us_seq,
+                      f"req/s={bs / (us_batch / 1e6):.0f}")
 
     write_trajectory("PROTOCOL", records)
+
+
+def smoke():
+    """Fast correctness leg for CI (no timing, no JSON): fused + survivor +
+    batched-engine paths must produce exact products at reduced m."""
+    from repro.mpc.engine import MPCEngine
+
+    s, t, z, m = 2, 2, 2, 8
+    proto = AGECMPCProtocol(s=s, t=t, z=z, m=m)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, proto.field.p, (m, m))
+    b = rng.integers(0, proto.field.p, (m, m))
+    want = np.array((a.astype(object).T @ b.astype(object)) % proto.field.p,
+                    np.int64)
+    key = jax.random.PRNGKey(0)
+    assert np.array_equal(np.asarray(proto.run(a, b, key)), want)
+    surv = np.ones(proto.n_workers, bool)
+    surv[[0, 4, 9]] = False
+    assert np.array_equal(
+        np.asarray(proto.run(a, b, key, survivors=surv)), want)
+    eng = MPCEngine(max_batch=8)
+    rids = [eng.submit(a, b, key=jax.random.PRNGKey(i), s=s, t=t, z=z, m=m,
+                       survivors=surv if i % 2 else None) for i in range(4)]
+    results = eng.flush()
+    assert all(np.array_equal(np.asarray(results[r]), want) for r in rids)
+    print(f"protocol smoke OK: fused, survivor, engine batch of {len(rids)} "
+          f"(stats {eng.stats})")
 
 
 if __name__ == "__main__":

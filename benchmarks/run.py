@@ -1,19 +1,31 @@
 """Benchmark aggregator — one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run``
+    PYTHONPATH=src python -m benchmarks.run            # full sweep
+    PYTHONPATH=src python benchmarks/run.py --smoke    # CI sanity leg
 
 Emits ``name,us_per_call,derived`` CSV (kernel/protocol benches) plus the
 paper-figure tables (fig2 / fig3a-c) and, when dry-run artifacts exist,
-the roofline table.
+the roofline table.  ``--smoke`` runs only the fast protocol correctness
+leg (fused, survivor-decode and batched-engine paths at reduced m) so CI
+catches regressions in the new paths without paying for the full sweep.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 
 sys.path.insert(0, "src")
+# make `import benchmarks` work under direct-script invocation too
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="fast protocol sanity leg only (CI)")
+    args = parser.parse_args(argv)
+
     from benchmarks import (  # noqa: WPS433
         fig2_workers,
         fig3_overheads,
@@ -21,6 +33,11 @@ def main() -> None:
         protocol_bench,
         roofline,
     )
+
+    if args.smoke:
+        print("== protocol smoke (fused / survivor / engine) ==")
+        protocol_bench.smoke()
+        return
 
     print("== fig2: required workers (paper Fig. 2) ==")
     fig2_workers.main()

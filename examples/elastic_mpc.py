@@ -1,4 +1,5 @@
-"""Elastic worker-pool demo: spares, phase-2 failures, re-planning.
+"""Elastic worker-pool demo: spares, phase-2 failures, re-planning, and
+batched serving with per-request dropout through the MPC engine.
 
     PYTHONPATH=src python examples/elastic_mpc.py
 """
@@ -6,26 +7,57 @@ import sys
 
 sys.path.insert(0, "src")
 
+import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.mpc.elastic import ElasticPool  # noqa: E402
+from repro.mpc.engine import MPCEngine  # noqa: E402
 
 pool = ElasticPool(s=2, t=2, z=2, m=8, spares=3)
-print(f"plan: N={pool.proto.n_workers} workers + {pool.spares} spares; "
+n = pool.proto.n_workers
+print(f"plan: N={n} workers + {pool.spares} spares; "
       f"phase-3 tolerance {pool.phase3_tolerance()} failures")
+print(f"pool alphas extend the plan's invertible set: "
+      f"{pool._alphas[:n].tolist()} + spares {pool._alphas[n:].tolist()}")
 
-# lose two workers BEFORE the exchange: spares absorb them
+# lose two workers BEFORE the exchange: spares absorb them, and the quorum
+# weights come out of the plan's survivor-solve LRU
 pool.fail([0, 7])
 idx, _ = pool.reconstruction_weights()
 print(f"after 2 failures: quorum from workers {idx[:5].tolist()}... "
-      f"(spares activated: {sorted(set(idx) - set(range(17)))})")
+      f"(spares activated: {sorted(set(idx) - set(range(n)))}); "
+      f"solve cache {pool.proto.plan.solve_cache_info()}")
 
-# catastrophic loss: below N -> re-plan with coarser partitioning
-pool.fail(list(range(1, 12)))
-try:
-    pool.active_subset()
-except RuntimeError as e:
-    print("pool infeasible:", e)
-new = pool.replan()
-print(f"re-planned: (s={new.s}, t={new.t}) needs N={new.n_workers} "
-      f"<= {int(pool.alive.sum())} alive")
+# ---- batched serving with heterogeneous per-request dropout -------------
+engine = MPCEngine(spares=3, max_batch=16)
+rng = np.random.default_rng(0)
+p = pool.proto.field.p
+expected = {}
+for i in range(8):
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    surv = None
+    if i % 2:  # every other request loses a random straggler set
+        surv = np.ones(n, bool)
+        surv[rng.choice(n, pool.phase3_tolerance(), replace=False)] = False
+    rid = engine.submit(a, b, key=jax.random.PRNGKey(i), survivors=surv,
+                        s=2, t=2, z=2, m=8)
+    expected[rid] = np.array(
+        (a.astype(object).T @ b.astype(object)) % p, np.int64)
+results = engine.flush()
+ok = all(np.array_equal(np.asarray(results[r]), expected[r])
+         for r in expected)
+print(f"engine: 8 mixed-dropout requests -> {len(results)} correct={ok}; "
+      f"stats {engine.stats}")
+
+# catastrophic loss: below N -> the engine escalates to a coarser plan
+engine.fail(list(range(1, 14)), s=2, t=2, z=2, m=8)
+a = rng.integers(0, p, (8, 8))
+b = rng.integers(0, p, (8, 8))
+rid = engine.submit(a, b, key=jax.random.PRNGKey(42), s=2, t=2, z=2, m=8)
+y = engine.flush()[rid]
+ok = np.array_equal(
+    np.asarray(y), np.array((a.astype(object).T @ b.astype(object)) % p,
+                            np.int64))
+print(f"after losing 13 workers: replanned and served correct={ok}; "
+      f"stats {engine.stats}")

@@ -1,10 +1,20 @@
 """Executable CMPC layer: field, Lagrange machinery, 3-phase protocols.
 
-Plans (alphas, reconstruction weights, Vandermonde tables) are memoized
-process-wide in :mod:`repro.mpc.planner`; see DESIGN.md §2.
+Plans (alphas, reconstruction weights, Vandermonde tables, staged jit
+programs, survivor-table LRUs) are memoized process-wide in
+:mod:`repro.mpc.planner`; see DESIGN.md §2 and §5.  Batched request serving
+lives in :mod:`repro.mpc.engine`, elastic worker pools in
+:mod:`repro.mpc.elastic`.
 """
 from .field import ACC_WINDOW, DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31, acc_window
-from .planner import ProtocolPlan, build_plan, cache_clear, cache_info, get_plan
+from .planner import (
+    ProtocolPlan,
+    ProtocolStages,
+    build_plan,
+    cache_clear,
+    cache_info,
+    get_plan,
+)
 from .protocol import AGECMPCProtocol
 
 __all__ = [
@@ -15,9 +25,21 @@ __all__ = [
     "P_MERSENNE31",
     "acc_window",
     "AGECMPCProtocol",
+    "MPCEngine",
     "ProtocolPlan",
+    "ProtocolStages",
     "build_plan",
     "cache_clear",
     "cache_info",
     "get_plan",
 ]
+
+
+def __getattr__(name: str):
+    # engine pulls in elastic + protocol; keep the subpackage import light
+    # for users who only need the field/planner layers
+    if name == "MPCEngine":
+        from .engine import MPCEngine
+
+        return MPCEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -3,8 +3,9 @@
 The coded redundancy gives two distinct tolerance windows:
 
 * **Phase-3 window** (free): once workers hold ``I(α_n)``, any
-  ``N − (t²+z)`` of them may vanish; the master re-solves the Vandermonde
-  system on the survivor α-set (``AGECMPCProtocol.decode(survivors=...)``).
+  ``N − (t²+z)`` of them may vanish; the master decodes from the survivor
+  α-set (``AGECMPCProtocol.decode(survivors=...)``) with rows served out of
+  the plan's survivor-table LRU.
 * **Phase-2 window** (needs spares): eq. (9) interpolates ``H(x)`` from all
   ``N = |P(H)|`` points, so losing a worker *before* the exchange needs a
   spare.  :class:`ElasticPool` provisions ``N + spares`` evaluation points
@@ -12,20 +13,31 @@ The coded redundancy gives two distinct tolerance windows:
   surviving N-subset — no data re-sharing, the sources' shares at spare α's
   were distributed in phase 1.
 
+Everything data-dependent the pool used to compute per call is now a plan
+cache lookup (DESIGN.md §5): the pool α's come from
+:meth:`repro.mpc.planner.ProtocolPlan.pool_alphas` — the plan's
+invertibility-searched α-set extended with validated spares, NOT a private
+``np.arange`` that silently diverges when the plan's α's were re-seeded —
+and :meth:`reconstruction_weights` resolves through the plan's survivor-
+solve LRU, so repeated failure patterns cost one Gauss–Jordan total.
+
 If the pool drops below ``N``, we *re-plan*: re-solve ``min_λ Γ(λ)`` for a
 coarser partitioning (smaller t) whose worker requirement fits the surviving
-pool — trading per-worker load for feasibility (the s/t trade-off of Fig. 2/3).
+pool — trading per-worker load for feasibility (the s/t trade-off of
+Fig. 2/3).  Candidate sizing uses the planner's memoized code resolution,
+and the winning protocol's tables come from the shared :func:`get_plan`
+cache — re-planning to an already-seen parameterization is table-lookup
+cheap.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-from ..core.age import optimal_age_code
 from .field import DEFAULT_FIELD, Field
-from .lagrange import inv_mod, vandermonde
+from .planner import _resolve_code
 from .protocol import AGECMPCProtocol
 
 
@@ -38,16 +50,21 @@ class ElasticPool:
     z: int
     m: int
     spares: int = 2
+    scheme: str = "age"
+    lam: Optional[int] = None
     field: Field = DEFAULT_FIELD
 
     def __post_init__(self):
         self.proto = AGECMPCProtocol(
-            s=self.s, t=self.t, z=self.z, m=self.m, field=self.field)
+            s=self.s, t=self.t, z=self.z, m=self.m, lam=self.lam,
+            scheme=self.scheme, field=self.field)
         self.pool_size = self.proto.n_workers + self.spares
         self.alive = np.ones(self.pool_size, dtype=bool)
-        # provision α's for the whole pool (re-uses the protocol's invertible
-        # prefix and extends it)
-        self._alphas = np.arange(1, self.pool_size + 1, dtype=np.int64)
+        # the plan's α-set (invertibility-searched, possibly re-seeded)
+        # extended with validated spare points — one evaluation grid for
+        # distributed shares AND spares (regression: a private arange here
+        # solved weights at α's where no shares were ever distributed)
+        self._alphas = self.proto.plan.pool_alphas(self.pool_size)
 
     # ------------------------------------------------------------- failures
     def fail(self, workers) -> None:
@@ -63,11 +80,14 @@ class ElasticPool:
         return idx[:n]
 
     def reconstruction_weights(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(subset, r-coefficient rows) for the current survivor quorum."""
+        """(subset, r-coefficient rows) for the current survivor quorum.
+
+        A plan-cache lookup: the generalized-Vandermonde solve over ``P(H)``
+        at the quorum α's runs once per distinct failure pattern and is
+        LRU-cached on the plan (``plan.quorum_weights``).
+        """
         idx = self.active_subset()
-        powers = list(self.proto.powers_h)
-        v = vandermonde(self.field, self._alphas[idx], powers)
-        w = inv_mod(self.field, v)
+        w = self.proto.plan.quorum_weights(tuple(idx), self.pool_size)
         return idx, w
 
     def phase3_tolerance(self) -> int:
@@ -77,24 +97,30 @@ class ElasticPool:
     # -------------------------------------------------------------- re-plan
     def replan(self) -> Optional[AGECMPCProtocol]:
         """Pool shrank below N: find the largest-throughput (s', t') whose
-        ``N_AGE(s', t', z)`` fits the surviving pool.  Returns the new plan
-        (or None if even t=1 BGW-like splitting doesn't fit)."""
+        ``N(s', t', z)`` fits the surviving pool.  Returns the new protocol
+        (or None if even t=1 BGW-like splitting doesn't fit).
+
+        Candidates are sized through the planner's memoized code resolution
+        — no throwaway protocol instances — and the winner's tables resolve
+        through the shared ``get_plan`` cache, so re-planning to a
+        parameterization any pool has seen before builds nothing.
+        """
         alive = int(self.alive.sum())
-        candidates: List[Tuple[int, AGECMPCProtocol]] = []
+        best: Optional[Tuple[int, int, int]] = None
         for t in range(self.t, 0, -1):
             for s in range(self.s, 0, -1):
                 if s == 1 and t == 1:
                     continue
                 if self.m % s or self.m % t:
                     continue
-                code, _ = optimal_age_code(s, t, self.z)
-                if code.n_workers <= alive:
-                    # prefer max st (least per-worker compute: m³/(st²))
-                    candidates.append(
-                        (s * t * t,
-                         AGECMPCProtocol(s=s, t=t, z=self.z, m=self.m,
-                                         field=self.field)))
-        if not candidates:
+                code = _resolve_code(self.scheme, s, t, self.z, self.lam)
+                if code.n_workers > alive:
+                    continue
+                # prefer max st² (least per-worker compute: m³/(st²))
+                if best is None or s * t * t > best[0]:
+                    best = (s * t * t, s, t)
+        if best is None:
             return None
-        candidates.sort(key=lambda c: -c[0])
-        return candidates[0][1]
+        _, s, t = best
+        return AGECMPCProtocol(s=s, t=t, z=self.z, m=self.m, lam=self.lam,
+                               scheme=self.scheme, field=self.field)

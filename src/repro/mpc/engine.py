@@ -1,0 +1,257 @@
+"""Batched CMPC request serving (DESIGN.md §5).
+
+Under serving traffic the unit of work is not one ``Y = AᵀB`` but a queue
+of them: many tenants, heterogeneous protocol parameterizations, and
+per-request straggler patterns.  :class:`MPCEngine` turns that queue into
+the fewest possible compiled-program dispatches:
+
+* **Grouping** — queued requests are bucketed by plan key
+  ``(scheme, s, t, z, λ, p, m)``.  Every request in a group shares one
+  :class:`~repro.mpc.planner.ProtocolPlan` (tables AND compiled stages).
+* **Batched phases 1–2** — each group is stacked and run through ONE
+  vmapped ``front`` program (phases 1–2 are survivor-mask independent, so
+  the whole group shares it regardless of dropout).  The vmapped program is
+  attached to the plan (``plan.runner("vfront")``) — one compile per plan,
+  amortized across every batch and every future flush.  Batches are padded
+  to the next power of two (capped at ``max_batch``) so recompiles are
+  O(log max_batch) per plan, not one per batch size.
+* **Per-request dropout** — each request may carry its own ``survivors``
+  mask.  Decode sub-groups requests by their survivor index prefix and runs
+  one vmapped ``decode`` per pattern, with rows served from the plan's
+  survivor-table LRU.  Heterogeneous dropout in one batch costs extra
+  decode dispatches (cheap), never extra phase-1/2 work.
+* **Replan escalation** — each group may be backed by an
+  :class:`~repro.mpc.elastic.ElasticPool` (created lazily; worker attrition
+  is reported via :meth:`MPCEngine.fail`).  Dead pool workers among the
+  first N fold into every request's decode mask; when the pool drops below
+  N the engine escalates to ``pool.replan()`` and serves the group under
+  the coarser protocol (per-request masks sized for the old worker set are
+  dropped — the new quorum decodes from its default prefix — and counted in
+  ``stats["masks_dropped"]``).
+* **Failure isolation** — an unservable request (effective mask below
+  threshold, infeasible pool) never takes the batch down: it lands in
+  ``engine.failures`` with a reason while every other request is served.
+
+Simulation scope: like ``AGECMPCProtocol.run``, phases 1–2 always execute
+all N logical workers of the serving plan; pool attrition therefore
+surfaces as phase-3 dropout (decode-side) until it forces a replan.  The
+phase-2 spare-quorum machinery (shares at spare α's, eq. (9) re-solve) is
+exercised through :meth:`ElasticPool.reconstruction_weights`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .elastic import ElasticPool
+from .field import DEFAULT_FIELD, Field
+from .planner import PlanKey
+from .protocol import AGECMPCProtocol
+
+
+@dataclasses.dataclass(frozen=True)
+class MPCRequest:
+    """One queued ``Y = AᵀB`` evaluation (internal to the engine)."""
+
+    rid: int
+    a: jnp.ndarray
+    b: jnp.ndarray
+    key: jnp.ndarray
+    proto: AGECMPCProtocol
+    survivors: Optional[np.ndarray]  # bool [N] or None (all alive)
+
+
+def _plan_key(proto: AGECMPCProtocol) -> PlanKey:
+    return (proto.scheme, proto.s, proto.t, proto.z, proto.lam,
+            proto.field.p, proto.m)
+
+
+def _pad_pow2(n: int, cap: int) -> int:
+    """Smallest power of two ≥ n, capped (bounds per-plan recompiles)."""
+    out = 1
+    while out < n:
+        out *= 2
+    return min(out, cap)
+
+
+class MPCEngine:
+    """Batched MPC request engine: queue, group, vmap, decode, escalate."""
+
+    def __init__(self, *, spares: int = 2, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.spares = spares
+        self.max_batch = max_batch
+        self._queue: List[MPCRequest] = []
+        self._pools: Dict[PlanKey, ElasticPool] = {}
+        self._replans: Dict[PlanKey, AGECMPCProtocol] = {}
+        self._next_rid = 0
+        self.stats = {"batches": 0, "replans": 0, "masks_dropped": 0,
+                      "failed": 0}
+        self.failures: Dict[int, str] = {}
+
+    # ------------------------------------------------------------- pools
+    def pool(self, *, s: int, t: int, z: int, m: int,
+             lam: Optional[int] = None, scheme: str = "age",
+             field: Field = DEFAULT_FIELD) -> ElasticPool:
+        """The elastic pool backing one plan group (created lazily)."""
+        proto = AGECMPCProtocol(s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
+                                field=field)
+        key = _plan_key(proto)
+        pool = self._pools.get(key)
+        if pool is None:
+            pool = self._pools[key] = ElasticPool(
+                s=s, t=t, z=z, m=m, spares=self.spares, scheme=scheme,
+                lam=lam, field=field)
+        return pool
+
+    def fail(self, workers, *, s: int, t: int, z: int, m: int,
+             lam: Optional[int] = None, scheme: str = "age",
+             field: Field = DEFAULT_FIELD) -> None:
+        """Report worker attrition for one plan group's pool."""
+        self.pool(s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
+                  field=field).fail(workers)
+
+    # ------------------------------------------------------------- queue
+    def submit(self, a, b, *, key, s: int, t: int, z: int, m: int,
+               survivors: Optional[np.ndarray] = None,
+               lam: Optional[int] = None, scheme: str = "age",
+               field: Field = DEFAULT_FIELD) -> int:
+        """Queue one ``Y = AᵀB`` request; returns its request id.
+
+        ``survivors`` (bool [N], optional) is this request's phase-3
+        dropout/straggler mask, validated against the submit-time protocol.
+        """
+        proto = AGECMPCProtocol(s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
+                                field=field)
+        if survivors is not None:
+            survivors = np.asarray(survivors, bool)
+            proto._survivor_prefix(survivors)  # shape + threshold checks
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(MPCRequest(
+            rid=rid, a=jnp.asarray(a, jnp.int64), b=jnp.asarray(b, jnp.int64),
+            key=key, proto=proto, survivors=survivors))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------- flush
+    def _serving_proto(self, key: PlanKey, proto: AGECMPCProtocol
+                       ) -> AGECMPCProtocol:
+        """Resolve the protocol a group is served under, escalating through
+        ``pool.replan()`` (memoized) while the backing pool is below N."""
+        for _ in range(len(self._pools) + 2):  # replan chains are short
+            replanned = self._replans.get(key)
+            if replanned is not None:
+                key, proto = _plan_key(replanned), replanned
+                continue
+            pool = self._pools.get(key)
+            if pool is None or pool.alive.sum() >= proto.n_workers:
+                return proto
+            new = pool.replan()
+            if new is None:
+                raise RuntimeError(
+                    f"pool for {key} infeasible ({int(pool.alive.sum())} "
+                    f"alive) and no coarser partitioning fits")
+            self._replans[key] = new
+            self.stats["replans"] += 1
+        raise RuntimeError("replan escalation did not converge")
+
+    def _fail_request(self, req: MPCRequest, reason: str) -> None:
+        self.failures[req.rid] = reason
+        self.stats["failed"] += 1
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Serve every queued request; returns ``{rid: Y}``.
+
+        One vmapped ``front`` dispatch per (plan group, padded batch), one
+        vmapped ``decode`` dispatch per distinct survivor pattern within
+        the batch (padded the same way, so recompiles stay O(log
+        max_batch) per plan).
+
+        Failures are isolated, never batch-fatal: a request whose
+        effective mask (its own ∩ the pool's) drops below ``t²+z``, or a
+        group whose pool is infeasible with no coarser partitioning, is
+        recorded in :attr:`failures` (``rid → reason``, replaced each
+        flush) and counted in ``stats["failed"]`` — every other queued
+        request is still served.
+        """
+        queue, self._queue = self._queue, []
+        groups: "OrderedDict[PlanKey, List[MPCRequest]]" = OrderedDict()
+        for req in queue:
+            groups.setdefault(_plan_key(req.proto), []).append(req)
+        results: Dict[int, np.ndarray] = {}
+        self.failures = {}
+        for key, reqs in groups.items():
+            try:
+                serving = self._serving_proto(key, reqs[0].proto)
+            except RuntimeError as e:
+                for req in reqs:
+                    self._fail_request(req, str(e))
+                continue
+            replanned = _plan_key(serving) != key
+            for lo in range(0, len(reqs), self.max_batch):
+                self._flush_batch(serving, replanned,
+                                  reqs[lo:lo + self.max_batch], results)
+        return results
+
+    def _flush_batch(self, proto: AGECMPCProtocol, replanned: bool,
+                     reqs: List[MPCRequest],
+                     results: Dict[int, np.ndarray]) -> None:
+        plan = proto.plan
+        stages = plan.stages()
+        n = proto.n_workers
+        # pool attrition among the first N folds into every request's mask
+        pool = self._pools.get(_plan_key(proto))
+        pool_mask = (pool.alive[:n] if pool is not None
+                     else np.ones(n, bool))
+        # pad to the next power of two with repeats of the last request so
+        # a plan compiles O(log max_batch) batch shapes, not one per size
+        width = _pad_pow2(len(reqs), self.max_batch)
+        pad = width - len(reqs)
+        a = jnp.stack([r.a for r in reqs] + [reqs[-1].a] * pad)
+        b = jnp.stack([r.b for r in reqs] + [reqs[-1].b] * pad)
+        keys = jnp.stack([jnp.asarray(r.key) for r in reqs]
+                         + [jnp.asarray(reqs[-1].key)] * pad)
+        vfront = plan.runner(
+            "vfront", lambda: jax.jit(jax.vmap(stages.front)))
+        i_pts = vfront(a, b, keys)                     # [B, N, m/t, m/t]
+        self.stats["batches"] += 1
+
+        # sub-group by survivor prefix; one vmapped decode per pattern
+        patterns: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        for pos, req in enumerate(reqs):
+            mask = pool_mask.copy()
+            if req.survivors is not None:
+                if replanned:
+                    # sized for the pre-replan worker set: no longer valid
+                    self.stats["masks_dropped"] += 1
+                else:
+                    mask &= req.survivors
+            try:
+                idx = proto._survivor_prefix(mask)
+            except RuntimeError as e:
+                # request mask ∩ pool attrition under threshold: this
+                # request fails alone, the rest of the batch is served
+                self._fail_request(req, str(e))
+                continue
+            patterns.setdefault(tuple(int(i) for i in idx), []).append(pos)
+        vdecode = plan.runner(
+            "vdecode",
+            lambda: jax.jit(jax.vmap(stages.decode, in_axes=(0, None, None))))
+        for idx, positions in patterns.items():
+            idx_j, rows_j = plan.survivor_tables(idx)
+            # pad like the front batch: subgroup sizes also only compile
+            # power-of-two shapes (padded outputs are discarded)
+            dw = _pad_pow2(len(positions), width)
+            pos_pad = positions + [positions[-1]] * (dw - len(positions))
+            ys = vdecode(i_pts[jnp.asarray(pos_pad)], idx_j, rows_j)
+            for k, pos in enumerate(positions):
+                results[reqs[pos].rid] = ys[k]

@@ -1,4 +1,4 @@
-"""Cached protocol planning for AGE/Entangled/PolyDot-CMPC (DESIGN.md §2).
+"""Cached protocol planning for AGE/Entangled/PolyDot-CMPC (DESIGN.md §2, §5).
 
 A *plan* is everything about one ``Y = AᵀB`` protocol instance that does not
 depend on the data: the degree-set code, the evaluation points α_n, the
@@ -12,36 +12,66 @@ heavy traffic.
 :func:`get_plan` therefore memoizes plans process-wide, keyed by
 ``(scheme, s, t, z, lam, field.p, m)``.  Every
 :class:`repro.mpc.protocol.AGECMPCProtocol` instance (and through it
-``secure_matmul`` and the benchmarks) resolves its tables through this
-cache, so repeated protocol instances — e.g. one per serving request —
-share alphas, ``r_coeffs``, Vandermonde tables *and* the jit-compiled fused
-runner instead of recomputing them.  ``cache_info()`` / ``cache_clear()``
-mirror ``functools.lru_cache`` semantics for tests and ops introspection.
+``secure_matmul``, :class:`repro.mpc.elastic.ElasticPool`,
+:class:`repro.mpc.engine.MPCEngine` and the benchmarks) resolves its tables
+through this cache, so repeated protocol instances — e.g. one per serving
+request — share alphas, ``r_coeffs``, Vandermonde tables *and* the
+jit-compiled stage programs instead of recomputing them.  ``cache_info()`` /
+``cache_clear()`` mirror ``functools.lru_cache`` semantics for tests and ops
+introspection.
+
+Beyond the static tables each plan owns (DESIGN.md §5):
+
+* **staged jit programs** (:class:`ProtocolStages`, via :meth:`ProtocolPlan
+  .stages`): ``encode`` / ``worker_compute`` / ``exchange`` / ``decode``,
+  plus the compositions ``front`` (phases 1–2, survivor-mask independent)
+  and ``fused`` (all three phases, default decode) — the decode stage takes
+  the survivor index vector and decode rows as *traced arguments*, so one
+  compiled program serves every survivor set;
+* **a survivor-solve LRU** (:meth:`ProtocolPlan.survivor_rows`,
+  :meth:`ProtocolPlan.quorum_weights`): phase-3 decode tables and phase-2
+  pool-quorum reconstruction weights keyed by the frozen survivor index
+  tuple, solved with the vectorized Montgomery/Gauss–Jordan path and
+  evicted least-recently-used at :data:`SOLVE_CACHE_SIZE` entries;
+* **spare evaluation points** (:meth:`ProtocolPlan.pool_alphas`): elastic
+  pools extend the plan's invertibility-searched α-set instead of inventing
+  their own, with the same deterministic re-seeding discipline.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import threading
+from collections import OrderedDict
 from typing import Callable, Dict, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.age import AGECode, GeneralizedPolyCode, optimal_age_code, polydot_code
-from .field import Field
+from ..kernels.barrett import matmul_folded, matmul_limbs, mod_p
+from .field import Field, acc_window
 from .lagrange import (
     ALPHA_POOL_LIMIT,
     ALPHA_SEARCH_SEED,
     ALPHA_SEARCH_TRIES,
     choose_alphas_with_inverse,
+    inv_mod,
     inv_mod_ref,
     matmul_mod,
     power_table,
     try_inverse,
+    vandermonde,
     vandermonde_ref,
 )
 
 PlanKey = Tuple[str, int, int, int, Optional[int], int, int]
+
+# per-plan LRU capacity for survivor decode tables / quorum weights; each
+# entry is a small int64 matrix (≤ N×N), so the cap bounds memory while
+# keeping every straggler pattern a serving fleet realistically revisits hot
+SOLVE_CACHE_SIZE = 128
 
 
 def _powers_a(code: GeneralizedPolyCode) -> np.ndarray:
@@ -59,6 +89,111 @@ def _powers_b(code: GeneralizedPolyCode) -> np.ndarray:
          for k in range(code.s) for l in range(code.t)],
         dtype=np.int64,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolStages:
+    """Staged jit programs for one plan (DESIGN.md §5).
+
+    The monolithic fused runner is split along the protocol's phase
+    boundaries so elasticity and batching compose instead of falling back:
+
+    * ``encode(a, b, k1) -> (f_a, f_b)`` — phase-1 shares for all N workers;
+    * ``worker_compute(f_a, f_b) -> h`` — every worker's ``H(α_n)``;
+    * ``exchange(h, k2) -> i_pts`` — G-mix + aggregate mask, ``[N, m/t, m/t]``;
+    * ``decode(i_pts, idx, rows) -> y`` — phase 3; the survivor index vector
+      and decode rows are *traced arguments*, so ONE compiled program serves
+      every survivor set (the rows swap in from the plan's LRU);
+    * ``front(a, b, key) -> i_pts`` — phases 1–2 in one program,
+      survivor-mask independent (the batched engine vmaps this);
+    * ``fused(a, b, key) -> y`` — all three phases with the default decode
+      rows baked in (the no-dropout hot path, identical to the pre-split
+      fused runner).
+
+    All six share the plan's Barrett/limb ``mm`` dispatch, so every path is
+    bit-exact for any supported prime (window contract, DESIGN.md §3).
+    """
+
+    encode: Callable
+    worker_compute: Callable
+    exchange: Callable
+    decode: Callable
+    front: Callable
+    fused: Callable
+
+
+def _build_stages(plan: "ProtocolPlan") -> ProtocolStages:
+    """Compile the staged programs for one plan (DESIGN.md §3, §5).
+
+    Bit-exactness matches the retired monolithic fused runner: phase-1
+    secret draws replicate the reference path exactly; the phase-2 masks
+    cancel identically in Y (``(V⁻¹V)[0:t², t²:t²+z] ≡ 0``), so the
+    aggregate mask is drawn directly from raw bits mod p.  Matmuls run
+    limb-decomposed over exact f64 GEMM where the K extent makes 3 GEMMs
+    cheaper than scalar int64 MACs, chunk-then-fold int64 otherwise.
+    """
+    p, s, t, z, m = plan.p, plan.s, plan.t, plan.z, plan.m
+    mt, ms = m // t, m // s
+    n, t2z = plan.n_workers, plan.recovery_threshold
+    win = acc_window(p)
+
+    def mm(x, y):
+        # crossover (measured, m=144/N=17): limb recombination costs ~10
+        # elementwise passes; the int64 dot costs K scalar-MAC passes.
+        # Only the phase-2 worker product (K = m/t) clears the bar.
+        if p.bit_length() <= 31 and x.shape[-1] > 32:
+            return matmul_limbs(x, y, p=p)
+        return matmul_folded(x, y, p=p, window=win)
+
+    va = jnp.asarray(plan.vand_a)
+    vb = jnp.asarray(plan.vand_b)
+    gm_t = jnp.asarray(plan.g_mix.T.copy())       # [n', n]
+    vg = jnp.asarray(plan.vand_g_secret)          # [n', z]
+    dec = jnp.asarray(plan.decode_rows)           # [t², t²+z]
+    default_idx = jnp.arange(t2z)
+
+    def encode(a, b, k1):
+        ka, kb = jax.random.split(k1)
+        sec_a = jax.random.randint(ka, (z, mt, ms), 0, p, dtype=jnp.int64)
+        sec_b = jax.random.randint(kb, (z, ms, mt), 0, p, dtype=jnp.int64)
+        at = a.T.reshape(t, mt, s, ms).transpose(0, 2, 1, 3)
+        blocks_a = at.reshape(t * s, mt, ms)
+        blocks_b = b.reshape(s, ms, t, mt).transpose(0, 2, 1, 3).reshape(
+            s * t, ms, mt)
+        terms_a = jnp.concatenate([blocks_a, sec_a]).reshape(-1, mt * ms)
+        terms_b = jnp.concatenate([blocks_b, sec_b]).reshape(-1, ms * mt)
+        f_a = mm(va, terms_a).reshape(n, mt, ms)
+        f_b = mm(vb, terms_b).reshape(n, ms, mt)
+        return f_a, f_b
+
+    def worker_compute(f_a, f_b):
+        return mm(f_a, f_b)                                   # [n, mt, mt]
+
+    def exchange(h, k2):
+        mask_sum = (jax.random.bits(k2, (z, mt, mt), jnp.uint64)
+                    % jnp.uint64(p)).astype(jnp.int64)
+        i_pts = mm(gm_t, h.reshape(n, mt * mt))
+        i_pts = mod_p(i_pts + mm(vg, mask_sum.reshape(z, mt * mt)), p)
+        return i_pts.reshape(n, mt, mt)
+
+    def decode(i_pts, idx, rows):
+        i_sel = jnp.take(jnp.asarray(i_pts, jnp.int64), idx, axis=0)
+        y_blocks = mm(jnp.asarray(rows, jnp.int64),
+                      i_sel.reshape(t2z, mt * mt))
+        grid = y_blocks.reshape(t, t, mt, mt)                 # [l, i, r, c]
+        return grid.transpose(1, 2, 0, 3).reshape(m, m)
+
+    def front(a, b, key):
+        k1, k2 = jax.random.split(key)
+        return exchange(worker_compute(*encode(a, b, k1)), k2)
+
+    def fused(a, b, key):
+        return decode(front(a, b, key), default_idx, dec)
+
+    return ProtocolStages(
+        encode=jax.jit(encode), worker_compute=jax.jit(worker_compute),
+        exchange=jax.jit(exchange), decode=jax.jit(decode),
+        front=jax.jit(front), fused=jax.jit(fused))
 
 
 @dataclasses.dataclass(eq=False)  # identity semantics (ndarray fields;
@@ -87,6 +222,16 @@ class ProtocolPlan:               # the cache's contract is `is`, not `==`)
         default_factory=dict, repr=False)
     _runner_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False)
+    # survivor-solve LRU (phase-3 decode tables + phase-2 quorum weights),
+    # keyed by the frozen survivor index tuple — DESIGN.md §5
+    _solve_cache: "OrderedDict" = dataclasses.field(
+        default_factory=OrderedDict, repr=False)
+    _solve_hits: int = dataclasses.field(default=0, repr=False)
+    _solve_misses: int = dataclasses.field(default=0, repr=False)
+    # provisioned pool α-sets, keyed by pool size (elastic layer)
+    _pool_alphas: Dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _field: Optional[Field] = dataclasses.field(default=None, repr=False)
 
     @property
     def n_workers(self) -> int:
@@ -95,6 +240,15 @@ class ProtocolPlan:               # the cache's contract is `is`, not `==`)
     @property
     def recovery_threshold(self) -> int:
         return self.t * self.t + self.z
+
+    @property
+    def field(self) -> Field:
+        """A ``Field`` over this plan's prime (modular solves only — the
+        fixed-point ``frac_bits`` is irrelevant here and left at default)."""
+        f = self._field
+        if f is None:
+            f = self._field = Field(self.p)
+        return f
 
     def runner(self, kind: str, build: Callable[[], Callable]) -> Callable:
         """Get-or-build a compiled runner attached to this plan.
@@ -108,6 +262,152 @@ class ProtocolPlan:               # the cache's contract is `is`, not `==`)
                 if fn is None:
                     fn = self._runners[kind] = build()
         return fn
+
+    def stages(self) -> ProtocolStages:
+        """The staged jit programs for this plan (compiled once, shared)."""
+        return self.runner("stages", lambda: _build_stages(self))
+
+    # ------------------------------------------------- survivor-solve cache
+    def _solve_cached(self, key: Tuple, solve: Callable[[], np.ndarray]
+                      ) -> np.ndarray:
+        """LRU get-or-solve: recently-used survivor patterns stay hot; the
+        cache evicts least-recently-used past SOLVE_CACHE_SIZE entries."""
+        with self._runner_lock:
+            val = self._solve_cache.get(key)
+            if val is not None:
+                self._solve_cache.move_to_end(key)
+                self._solve_hits += 1
+                return val
+        val = solve()
+        with self._runner_lock:
+            hit = self._solve_cache.get(key)
+            if hit is not None:  # benign solve race: keep the first
+                self._solve_cache.move_to_end(key)
+                self._solve_hits += 1
+                return hit
+            self._solve_misses += 1
+            self._solve_cache[key] = val
+            while len(self._solve_cache) > SOLVE_CACHE_SIZE:
+                self._solve_cache.popitem(last=False)
+        return val
+
+    def survivor_rows(self, idx) -> np.ndarray:
+        """Phase-3 decode rows ``[t², t²+z]`` for one survivor index tuple.
+
+        ``idx``: the first ``t²+z`` alive worker indices, ascending.  The
+        default prefix short-circuits to :attr:`decode_rows` (so an
+        explicitly-passed all-True mask costs nothing); any other pattern
+        hits the LRU, solved on miss with the vectorized Montgomery/
+        Gauss–Jordan path (never the ``*_ref`` oracles).
+        """
+        t2z = self.recovery_threshold
+        idx = tuple(int(i) for i in idx)
+        if len(idx) != t2z:
+            raise ValueError(
+                f"need exactly {t2z} survivor indices, got {len(idx)}")
+        if idx == tuple(range(t2z)):
+            return self.decode_rows
+
+        def solve() -> np.ndarray:
+            v = vandermonde(self.field, self.alphas[list(idx)],
+                            np.arange(t2z, dtype=np.int64))
+            return inv_mod(self.field, v)[: self.t * self.t]
+
+        return self._solve_cached(("survivor", idx), solve)
+
+    def survivor_tables(self, idx) -> Tuple:
+        """Device-resident ``(indices, decode rows)`` for one survivor tuple.
+
+        The jnp twins of :meth:`survivor_rows`, LRU-cached alongside them so
+        repeat decodes of a known straggler pattern skip the host→device
+        transfer entirely — the serving hot path feeds these straight into
+        the compiled decode stage.
+        """
+        idx = tuple(int(i) for i in idx)
+
+        def build() -> Tuple:
+            rows = self.survivor_rows(idx)
+            return (jnp.asarray(np.asarray(idx, np.int64)),
+                    jnp.asarray(rows))
+
+        return self._solve_cached(("survivor_dev", idx), build)
+
+    def quorum_weights(self, idx, pool_size: int) -> np.ndarray:
+        """Phase-2 reconstruction weights (inverse of the generalized
+        Vandermonde over ``P(H)``, eq. (9)) for an elastic-pool quorum.
+
+        ``idx``: N worker indices into the ``pool_size`` provisioned pool
+        (:meth:`pool_alphas`).  LRU-cached like :meth:`survivor_rows`.
+        """
+        n = self.n_workers
+        idx = tuple(int(i) for i in idx)
+        if len(idx) != n:
+            raise ValueError(f"need exactly N={n} quorum indices, got "
+                             f"{len(idx)}")
+
+        def solve() -> np.ndarray:
+            al = self.pool_alphas(pool_size)[list(idx)]
+            v = vandermonde(self.field, al, self.powers_h)
+            return inv_mod(self.field, v)
+
+        return self._solve_cached(("quorum", pool_size, idx), solve)
+
+    def solve_cache_info(self) -> Dict[str, int]:
+        with self._runner_lock:
+            return {"hits": self._solve_hits, "misses": self._solve_misses,
+                    "size": len(self._solve_cache)}
+
+    # --------------------------------------------------- spare α provisioning
+    def pool_alphas(self, pool_size: int) -> np.ndarray:
+        """Evaluation points for an elastic pool of ``pool_size ≥ N`` workers.
+
+        The first N entries are exactly this plan's (invertibility-searched,
+        possibly re-seeded) α's — shares distributed in phase 1 and spare
+        points live on ONE polynomial evaluation grid.  Spares extend the
+        set with the smallest unused field points, each validated with the
+        same re-seeding discipline as the base search: appending spare k
+        must keep the canonical prefix-failure quorum (pool workers
+        ``k−N+1 … k``) solvable over ``P(H)``; singular candidates are
+        skipped deterministically.  Results are memoized per pool size.
+        """
+        n = self.n_workers
+        if pool_size < n:
+            raise ValueError(f"pool_size {pool_size} < N={n}")
+        if pool_size >= self.p:
+            raise ValueError(
+                f"pool_size {pool_size} needs distinct nonzero α's mod "
+                f"{self.p}")
+        with self._runner_lock:
+            cached = self._pool_alphas.get(pool_size)
+        if cached is not None:
+            return cached
+        pool = [int(a) for a in self.alphas]
+        used = {a % self.p for a in pool}
+        rng = np.random.default_rng(ALPHA_SEARCH_SEED)
+        fresh = (a for a in range(1, min(self.p, ALPHA_POOL_LIMIT))
+                 if a not in used)
+        while len(pool) < pool_size:
+            for _ in range(ALPHA_SEARCH_TRIES):
+                cand = next(fresh, None)
+                if cand is None:  # tiny fields: re-seeded random fallback
+                    cand = int(rng.integers(1, self.p))
+                    if cand in used:
+                        continue
+                quorum = np.array(pool[len(pool) - n + 1:] + [cand], np.int64)
+                if try_inverse(self.field,
+                               vandermonde(self.field, quorum,
+                                           self.powers_h)) is not None:
+                    pool.append(cand)
+                    used.add(cand % self.p)
+                    break
+            else:
+                raise RuntimeError(
+                    f"no invertible spare α found in {ALPHA_SEARCH_TRIES} "
+                    f"tries extending pool to {len(pool) + 1}")
+        arr = np.array(pool, dtype=np.int64)
+        with self._runner_lock:
+            arr = self._pool_alphas.setdefault(pool_size, arr)
+        return arr
 
 
 @functools.lru_cache(maxsize=None)

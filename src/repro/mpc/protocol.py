@@ -14,11 +14,15 @@ Straggler / fault tolerance: phase 3 decodes from ANY ``t²+z`` surviving
 workers (coded redundancy = the paper's headline property, exposed here as
 ``decode(..., survivors=mask)``).
 
-Fast path (DESIGN.md §2-§3): all data-independent tables come from the
-process-wide :mod:`repro.mpc.planner` cache, and ``run`` defaults to a
-single jit-compiled program covering all three phases — chunk-then-fold
-matmuls with Barrett reduction (:mod:`repro.kernels.barrett`) instead of
-per-op ``einsum … % p``.  ``mode="reference"`` keeps the original eager
+Fast path (DESIGN.md §2-§3, §5): all data-independent tables come from the
+process-wide :mod:`repro.mpc.planner` cache, and ``run`` composes the
+plan's staged jit programs (:class:`repro.mpc.planner.ProtocolStages`) —
+chunk-then-fold matmuls with Barrett reduction
+(:mod:`repro.kernels.barrett`) instead of per-op ``einsum … % p``.  The
+default all-alive path executes the single fully-fused program; a
+``survivors`` mask runs the SAME phase-1/2 program (``front``) and swaps
+only the decode stage's rows in from the plan's survivor-table LRU — no
+eager fallback.  ``mode="reference"`` keeps the original eager
 phase-by-phase path (the bit-exactness oracle and benchmark baseline);
 ``mode="pallas"`` routes the heavy phases through the Pallas kernels
 (:mod:`repro.kernels.modmatmul`, :mod:`repro.kernels.polyeval`) — interpret
@@ -35,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.age import GeneralizedPolyCode
-from ..kernels.barrett import matmul_folded, matmul_limbs, mod_p
+from ..kernels.barrett import mod_p
 from .field import DEFAULT_FIELD, Field, acc_window
 from .lagrange import inv_mod, vandermonde
 from .planner import ProtocolPlan, get_plan
@@ -191,36 +195,45 @@ class AGECMPCProtocol:
         return i_pts
 
     # -------------------------------------------------------------- phase 3
+    def _survivor_prefix(self, survivors: Optional[np.ndarray]) -> np.ndarray:
+        """First ``t²+z`` alive worker indices for a survivor mask.
+
+        Raises if the mask is mis-shaped or fewer than ``t²+z`` survive
+        (beyond coded tolerance).  The prefix is the decode quorum; its
+        frozen tuple keys the plan's survivor-table LRU.
+        """
+        t2z = self.recovery_threshold
+        alive = (np.ones(self.n_workers, bool) if survivors is None
+                 else np.asarray(survivors, bool))
+        if alive.shape != (self.n_workers,):
+            raise ValueError(
+                f"survivors mask must have shape ({self.n_workers},), got "
+                f"{alive.shape}")
+        idx = np.nonzero(alive)[0]
+        if len(idx) < t2z:
+            raise RuntimeError(
+                f"only {len(idx)} workers alive < threshold {t2z}")
+        return idx[:t2z]
+
     def decode(self, i_points, survivors: Optional[np.ndarray] = None):
         """Master reconstructs Y from any t²+z surviving I(α_n) points.
 
         ``survivors``: boolean mask [N]; defaults to all alive.  Raises if
         fewer than ``t²+z`` survive (beyond coded tolerance).
+
+        Decode rows resolve through the plan: masks whose first ``t²+z``
+        alive indices equal the default prefix (including an explicit
+        all-True mask) short-circuit to the precomputed ``plan.decode_rows``;
+        every other survivor set hits the plan's LRU of cached tables,
+        solved on miss with the vectorized Montgomery/Gauss–Jordan path.
+        The arithmetic runs through the plan's compiled decode stage — the
+        same single program ``run(survivors=...)`` and the batched engine
+        use, window-safe for any supported prime (DESIGN.md §3, §5).
         """
-        t2z = self.recovery_threshold
-        alive = (np.ones(self.n_workers, bool) if survivors is None
-                 else np.asarray(survivors, bool))
-        idx = np.nonzero(alive)[0]
-        if len(idx) < t2z:
-            raise RuntimeError(
-                f"only {len(idx)} workers alive < threshold {t2z}")
-        idx = idx[:t2z]
-        if survivors is None:
-            w = self.plan.decode_rows                      # precomputed
-        else:
-            v = vandermonde(self.field, self.alphas[idx], list(range(t2z)))
-            w = inv_mod(self.field, v)[: self.t * self.t]  # coeffs 0..t²-1
-        i_sel = jnp.asarray(i_points)[jnp.asarray(idx)]
-        t, mt = self.t, self.m // self.t
-        # window-safe fold (a single-fold einsum overflows for small-window
-        # primes like Mersenne-31); identical values for the default prime
-        y_blocks = matmul_folded(
-            jnp.asarray(w), i_sel.reshape(t2z, -1),
-            p=self.field.p, window=acc_window(self.field.p))
-        # u = i + t·l  ->  block row i, block col l of Y
-        grid = y_blocks.reshape(t, t, mt, mt)       # [l, i, r, c]
-        y = grid.transpose(1, 2, 0, 3).reshape(self.m, self.m)
-        return y
+        idx = self._survivor_prefix(survivors)
+        idx_j, rows_j = self.plan.survivor_tables(tuple(idx))
+        return self.plan.stages().decode(
+            jnp.asarray(i_points, jnp.int64), idx_j, rows_j)
 
     # ------------------------------------------------------------------ run
     def run(self, a, b, key, *, survivors: Optional[np.ndarray] = None,
@@ -229,33 +242,41 @@ class AGECMPCProtocol:
 
         ``mode`` selects the execution path (bit-identical where defined):
 
-        * ``"fused"`` (default) — one jit-compiled program for all three
-          phases, Barrett-folded matmuls, decode rows from the plan cache.
-          Exact for any supported prime (chunked to the field window).
+        * ``"fused"`` (default) — the plan's staged jit programs
+          (DESIGN.md §5).  All-alive: one fully-fused program for all three
+          phases.  With a ``survivors`` mask: the SAME compiled phase-1/2
+          ``front`` program, then the shared decode stage with the survivor
+          rows swapped in from the plan's LRU — the mask never changes
+          which programs compile, only which rows they consume.  Exact for
+          any supported prime (chunked to the field window).
         * ``"pallas"`` — heavy phases through the Pallas kernels (interpret
-          mode on CPU; the tiled VMEM programs on TPU).
-        * ``"reference"`` — the original eager phase-by-phase path.
+          mode on CPU; the tiled VMEM programs on TPU); survivor masks take
+          the same cached-rows decode.
+        * ``"reference"`` — the original eager phase-by-phase path, ending
+          in the seed's per-call object-dtype survivor solve.
 
         The reference and pallas paths accumulate whole term/worker sums in
         one int64 window, so they require ``acc_window(p) ≥ max(ts+z, N)``
         — true for the default prime, NOT for Mersenne-31 (window 2).
         They raise a descriptive error rather than silently overflow
         (DESIGN.md §3); use the fused default for small-window fields.
-
-        A non-default ``survivors`` mask always takes the reference decode
-        (the survivor subset changes the phase-3 solve).
         """
         if mode not in ("fused", "pallas", "reference"):
             raise ValueError(
                 f"unknown mode {mode!r}: expected fused|pallas|reference")
-        if survivors is None and mode == "fused":
-            runner = self.plan.runner(
-                "fused", lambda: _build_fused_runner(self.plan))
-            return runner(jnp.asarray(a, jnp.int64), jnp.asarray(b, jnp.int64),
-                          key)
-        if survivors is None and mode == "pallas":
-            return self._run_pallas(a, b, key)
-        return self.run_reference(a, b, key, survivors=survivors)
+        if mode == "reference":
+            return self.run_reference(a, b, key, survivors=survivors)
+        if mode == "pallas":
+            return self._run_pallas(a, b, key, survivors=survivors)
+        stages = self.plan.stages()
+        a = jnp.asarray(a, jnp.int64)
+        b = jnp.asarray(b, jnp.int64)
+        if survivors is None:
+            return stages.fused(a, b, key)
+        idx = self._survivor_prefix(survivors)
+        idx_j, rows_j = self.plan.survivor_tables(tuple(idx))
+        i_pts = stages.front(a, b, key)
+        return stages.decode(i_pts, idx_j, rows_j)
 
     def run_reference(self, a, b, key, *,
                       survivors: Optional[np.ndarray] = None):
@@ -310,24 +331,29 @@ class AGECMPCProtocol:
                 f"acc_window({self.field.p})={win}; use the default fused "
                 "mode for small-window fields (DESIGN.md §3)")
 
-    def _run_pallas(self, a, b, key, *, interpret: Optional[bool] = None):
+    def _run_pallas(self, a, b, key, *,
+                    survivors: Optional[np.ndarray] = None,
+                    interpret: Optional[bool] = None):
         """Phases 1-3 through the Pallas kernels (bit-exact with ``run``).
 
         ``interpret=None`` auto-selects: the compiled block programs on
         TPU, interpret mode elsewhere (this container is CPU-only).  Same
         window precondition as the reference path: the polyeval kernel
-        keeps K fully resident with one fold at the end.
+        keeps K fully resident with one fold at the end.  Survivor masks
+        use the plan's cached decode tables, like the fused path.
         """
         self._require_window("mode='pallas' (single-fold polyeval)")
         from ..kernels.polyeval import polyeval
 
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
+        dec_idx = self._survivor_prefix(survivors)
+        dec_rows = self.plan.survivor_rows(tuple(dec_idx))
 
         p = self.field.p
         t, z, m = self.t, self.z, self.m
         mt, ms = m // t, m // self.s
-        n, t2z = self.n_workers, self.recovery_threshold
+        n = self.n_workers
         k1, k2 = jax.random.split(key)
         ka, kb = jax.random.split(k1)
         sec_a = self.field.random(ka, (z, mt, ms))
@@ -348,7 +374,8 @@ class AGECMPCProtocol:
             i_pts + polyeval(jnp.asarray(self.vand_g_secret),
                              mask_sum.reshape(z, mt * mt), p=p,
                              interpret=interpret), p)
-        y_blocks = polyeval(jnp.asarray(self.plan.decode_rows), i_pts[:t2z],
+        y_blocks = polyeval(jnp.asarray(dec_rows),
+                            i_pts[jnp.asarray(dec_idx)],
                             p=p, interpret=interpret)
         grid = y_blocks.reshape(t, t, mt, mt)
         return grid.transpose(1, 2, 0, 3).reshape(m, m)
@@ -373,70 +400,6 @@ class AGECMPCProtocol:
             for pw in (sec_a, sec_b):
                 v = vandermonde(self.field, al, pw)
                 inv_mod(self.field, v)  # raises LinAlgError if singular
-
-
-def _build_fused_runner(plan: ProtocolPlan):
-    """Compile the all-three-phases program for one plan (DESIGN.md §3).
-
-    Bit-exactness: the *output* Y is identical to ``run_reference`` on every
-    input.  The phase-1 secrets replicate the reference draws exactly; the
-    phase-2 masks differ in *how* they are drawn — legitimate because the
-    mask polynomial's contribution to the decoded coefficients is
-    ``(V⁻¹V)[0:t², t²:t²+z] ≡ 0``: it cancels *identically* in F_p, so any
-    mask values yield the same Y.  The single-process simulation only ever
-    consumes the masks through their sum ``Σ_n R^{(n)}_w`` (see
-    ``phase2_exchange``), so the fused program draws that aggregate
-    directly via raw bits mod p (the sharded runner's ``prg_masks``
-    optimization) instead of materializing N per-worker tensors.  Matmuls
-    run limb-decomposed over exact f64 GEMM
-    (:func:`repro.kernels.barrett.matmul_limbs`) where the K extent makes
-    3 GEMMs cheaper than scalar int64 MACs, chunk-then-fold int64 otherwise.
-    """
-    p, s, t, z, m = plan.p, plan.s, plan.t, plan.z, plan.m
-    mt, ms = m // t, m // s
-    n, t2z = plan.n_workers, plan.recovery_threshold
-    win = acc_window(p)
-
-    def mm(x, y):
-        # crossover (measured, m=144/N=17): limb recombination costs ~10
-        # elementwise passes; the int64 dot costs K scalar-MAC passes.
-        # Only the phase-2 worker product (K = m/t) clears the bar.
-        if p.bit_length() <= 31 and x.shape[-1] > 32:
-            return matmul_limbs(x, y, p=p)
-        return matmul_folded(x, y, p=p, window=win)
-    va = jnp.asarray(plan.vand_a)
-    vb = jnp.asarray(plan.vand_b)
-    gm_t = jnp.asarray(plan.g_mix.T.copy())       # [n', n]
-    vg = jnp.asarray(plan.vand_g_secret)          # [n', z]
-    dec = jnp.asarray(plan.decode_rows)           # [t², t²+z]
-
-    def run(a, b, key):
-        k1, k2 = jax.random.split(key)
-        ka, kb = jax.random.split(k1)
-        sec_a = jax.random.randint(ka, (z, mt, ms), 0, p, dtype=jnp.int64)
-        sec_b = jax.random.randint(kb, (z, ms, mt), 0, p, dtype=jnp.int64)
-        at = a.T.reshape(t, mt, s, ms).transpose(0, 2, 1, 3)
-        blocks_a = at.reshape(t * s, mt, ms)
-        blocks_b = b.reshape(s, ms, t, mt).transpose(0, 2, 1, 3).reshape(
-            s * t, ms, mt)
-        terms_a = jnp.concatenate([blocks_a, sec_a]).reshape(-1, mt * ms)
-        terms_b = jnp.concatenate([blocks_b, sec_b]).reshape(-1, ms * mt)
-        # phase 1: shares for all N workers (one folded matmul each)
-        f_a = mm(va, terms_a).reshape(n, mt, ms)
-        f_b = mm(vb, terms_b).reshape(n, ms, mt)
-        # phase 2 compute: every worker's H(α_n), batched over n
-        h = mm(f_a, f_b)                                      # [n, mt, mt]
-        # phase 2 exchange: G-mix + z mask polynomials (aggregate mask draw)
-        mask_sum = (jax.random.bits(k2, (z, mt, mt), jnp.uint64)
-                    % jnp.uint64(p)).astype(jnp.int64)
-        i_pts = mm(gm_t, h.reshape(n, mt * mt))
-        i_pts = mod_p(i_pts + mm(vg, mask_sum.reshape(z, mt * mt)), p)
-        # phase 3: default all-alive decode (precomputed V⁻¹ rows)
-        y_blocks = mm(dec, i_pts[:t2z])
-        grid = y_blocks.reshape(t, t, mt, mt)                 # [l, i, r, c]
-        return grid.transpose(1, 2, 0, 3).reshape(m, m)
-
-    return jax.jit(run)
 
 
 def expected_overheads(proto: AGECMPCProtocol) -> dict:

@@ -1,0 +1,417 @@
+"""Elastic protocol engine: staged survivor decode vs the seed oracle,
+plan-provisioned pool α's, survivor-table LRU semantics, and the batched
+request engine (grouping, per-request dropout, replan escalation)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep: deterministic fallback sweeps
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+from repro.mpc import AGECMPCProtocol, get_plan
+from repro.mpc import planner as planner_mod
+from repro.mpc.elastic import ElasticPool
+from repro.mpc.engine import MPCEngine
+from repro.mpc.field import DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31
+from repro.mpc.lagrange import inv_mod_ref, matmul_mod, vandermonde, vandermonde_ref
+from repro.mpc.planner import SOLVE_CACHE_SIZE
+
+PRIMES = [P_DEFAULT, P_MERSENNE31]
+SCHEMES = ["age", "entangled", "polydot"]
+
+
+def exact_ref(a, b, p):
+    return np.array((a.astype(object).T @ b.astype(object)) % p,
+                    dtype=np.int64)
+
+
+def decode_seed_oracle(proto, i_points, survivors):
+    """``AGECMPCProtocol._decode_seed``'s exact math on object dtype.
+
+    The seed decode folds all ``t²+z`` products in one int64 einsum, which
+    overflows for small-window primes (Mersenne-31); this oracle is the
+    same algorithm — per-call ``vandermonde_ref``/``inv_mod_ref`` survivor
+    solve — with Python-int accumulation, so it is bit-identical to
+    ``_decode_seed`` wherever the seed is exact AND defined for both
+    supported primes.
+    """
+    t2z = proto.recovery_threshold
+    idx = np.nonzero(np.asarray(survivors, bool))[0][:t2z]
+    v = vandermonde_ref(proto.field, proto.alphas[idx], list(range(t2z)))
+    w = inv_mod_ref(proto.field, v)[: proto.t * proto.t]
+    i_sel = np.asarray(i_points)[idx].reshape(t2z, -1)
+    y_blocks = np.array(
+        (w.astype(object) @ i_sel.astype(object)) % proto.field.p, np.int64)
+    t, mt = proto.t, proto.m // proto.t
+    grid = y_blocks.reshape(t, t, mt, mt)
+    return grid.transpose(1, 2, 0, 3).reshape(proto.m, proto.m)
+
+
+def random_mask(rng, n, t2z):
+    """Random survivor mask keeping between t²+z and n-1 workers alive."""
+    alive = int(rng.integers(t2z, n))
+    mask = np.zeros(n, bool)
+    mask[rng.choice(n, alive, replace=False)] = True
+    return mask
+
+
+# ------------------------------------------------- staged survivor decode
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    scheme=st.sampled_from(SCHEMES),
+    p=st.sampled_from(PRIMES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_survivor_run_bit_identical_to_seed_decode(scheme, p, seed):
+    """Property: the staged fused path with ANY valid dropout mask equals
+    the seed survivor decode bit-for-bit (and the exact product)."""
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8, scheme=scheme,
+                            field=Field(p))
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    mask = random_mask(rng, proto.n_workers, proto.recovery_threshold)
+    key = jax.random.PRNGKey(seed % 2**31)
+    y = proto.run(a, b, key, survivors=mask)
+    np.testing.assert_array_equal(np.asarray(y), exact_ref(a, b, p))
+    # decode-level bit-identity vs the seed's per-call survivor solve, on
+    # arbitrary points (not just protocol outputs)
+    i_pts = rng.integers(0, p, (proto.n_workers, 4, 4))
+    np.testing.assert_array_equal(
+        np.asarray(proto.decode(i_pts, mask)),
+        decode_seed_oracle(proto, i_pts, mask))
+
+
+def test_survivor_run_matches_decode_seed_directly():
+    """For the default prime the in-tree ``_decode_seed`` is exact: the
+    staged path must reproduce it bit-for-bit, not just the math oracle."""
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    rng = np.random.default_rng(11)
+    i_pts = rng.integers(0, proto.field.p, (proto.n_workers, 4, 4))
+    for seed in range(4):
+        mask = random_mask(np.random.default_rng(seed), proto.n_workers,
+                           proto.recovery_threshold)
+        np.testing.assert_array_equal(
+            np.asarray(proto.decode(i_pts, mask)),
+            np.asarray(proto._decode_seed(i_pts, mask)))
+
+
+def test_survivor_run_does_not_fall_back_to_reference(monkeypatch):
+    """A non-default mask must execute the staged fused path — the old
+    ``run_reference`` detour is gone."""
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+
+    def boom(*a, **k):
+        raise AssertionError("survivor path fell back to run_reference")
+
+    monkeypatch.setattr(AGECMPCProtocol, "run_reference", boom)
+    monkeypatch.setattr(AGECMPCProtocol, "_decode_seed", boom)
+    mask = np.ones(proto.n_workers, bool)
+    mask[[0, 2, 9]] = False
+    y = proto.run(a, b, jax.random.PRNGKey(1), survivors=mask)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, proto.field.p))
+
+
+def test_pallas_survivor_decode():
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+    mask = np.ones(proto.n_workers, bool)
+    mask[:4] = False
+    y = proto.run(a, b, jax.random.PRNGKey(2), survivors=mask, mode="pallas")
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, proto.field.p))
+
+
+def test_survivor_mask_shape_validated():
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    with pytest.raises(ValueError, match="shape"):
+        proto.decode(np.zeros((proto.n_workers, 4, 4), np.int64),
+                     np.ones(proto.n_workers + 1, bool))
+
+
+# ------------------------------------------------- survivor-table LRU
+
+
+def test_survivor_rows_short_circuits_default_prefix():
+    """An explicitly-passed all-True mask must hit ``plan.decode_rows``
+    directly — no rebuild, no cache entry (the satellite fix)."""
+    plan = get_plan("age", 2, 2, 2, None, DEFAULT_FIELD, 8)
+    t2z = plan.recovery_threshold
+    before = plan.solve_cache_info()
+    rows = plan.survivor_rows(tuple(range(t2z)))
+    assert rows is plan.decode_rows
+    # a mask whose alive prefix equals the default also short-circuits
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    mask = np.ones(proto.n_workers, bool)
+    mask[t2z + 1] = False  # dead worker beyond the decode prefix
+    idx = proto._survivor_prefix(mask)
+    assert plan.survivor_rows(tuple(idx)) is plan.decode_rows
+    after = plan.solve_cache_info()
+    assert after["misses"] == before["misses"]
+
+
+def test_survivor_rows_cached_and_evicted():
+    plan = get_plan("age", 2, 3, 3, None, DEFAULT_FIELD, 12)
+    t2z, n = plan.recovery_threshold, plan.n_workers
+    idx = tuple(range(n - t2z, n))  # last-t²+z survivors
+    r1 = plan.survivor_rows(idx)
+    r2 = plan.survivor_rows(idx)
+    assert r1 is r2  # hit returns the cached object
+    # the solved rows are the true decode inverse restricted to 0..t²-1
+    v = vandermonde(plan.field, plan.alphas[list(idx)], list(range(t2z)))
+    prod = matmul_mod(r1, v, plan.p)
+    want = np.eye(t2z, dtype=np.int64)[: plan.t * plan.t]
+    np.testing.assert_array_equal(prod, want)
+    # eviction: flood with > SOLVE_CACHE_SIZE distinct patterns
+    rng = np.random.default_rng(0)
+    for _ in range(SOLVE_CACHE_SIZE + 8):
+        pick = tuple(sorted(rng.choice(n, t2z, replace=False).tolist()))
+        plan.survivor_rows(pick)
+    assert plan.solve_cache_info()["size"] <= SOLVE_CACHE_SIZE
+
+
+def test_survivor_rows_rejects_wrong_arity():
+    plan = get_plan("age", 2, 2, 2, None, DEFAULT_FIELD, 8)
+    with pytest.raises(ValueError, match="survivor indices"):
+        plan.survivor_rows((0, 1))
+
+
+# ------------------------------------------------- plan-provisioned pools
+
+
+def test_pool_alphas_extend_plan_alphas():
+    plan = get_plan("age", 2, 2, 2, None, DEFAULT_FIELD, 8)
+    pool = plan.pool_alphas(plan.n_workers + 4)
+    np.testing.assert_array_equal(pool[: plan.n_workers], plan.alphas)
+    assert len(set(int(a) % plan.p for a in pool)) == len(pool)  # distinct
+    assert plan.pool_alphas(plan.n_workers + 4) is pool  # memoized
+    with pytest.raises(ValueError, match="pool_size"):
+        plan.pool_alphas(plan.n_workers - 1)
+
+
+def test_elastic_pool_follows_reseeded_plan_alphas():
+    """Regression (ISSUE 2 satellite): the pool used to hardcode
+    ``np.arange(1, pool_size+1)`` even when the plan's α-set had been
+    re-seeded for invertibility, solving survivor weights at α's where no
+    shares were ever distributed.  Plant a plan whose α's differ from the
+    arange default and check the pool derives its grid from the plan."""
+    params = ("age", 2, 2, 2, None, DEFAULT_FIELD.p, 8)
+    real = get_plan("age", 2, 2, 2, None, DEFAULT_FIELD, 8)
+    # a permuted α-set stands in for a re-seeded search result (row
+    # permutation preserves invertibility of every solve the pool does)
+    tampered = dataclasses.replace(
+        real, alphas=real.alphas[::-1].copy(),
+        _runners={}, _solve_cache=type(real._solve_cache)(),
+        _pool_alphas={}, _field=None)
+    with planner_mod._LOCK:
+        planner_mod._CACHE[params] = tampered
+    try:
+        pool = ElasticPool(s=2, t=2, z=2, m=8, spares=2)
+        assert pool.proto.plan is tampered
+        np.testing.assert_array_equal(
+            pool._alphas[: pool.proto.n_workers], tampered.alphas)
+        # weights solve against the grid shares were distributed on
+        pool.fail([0, 3])
+        idx, w = pool.reconstruction_weights()
+        v = vandermonde(pool.field, pool._alphas[idx],
+                        pool.proto.plan.powers_h)
+        np.testing.assert_array_equal(
+            matmul_mod(w, v, pool.field.p),
+            np.eye(len(idx), dtype=np.int64))
+    finally:
+        with planner_mod._LOCK:
+            planner_mod._CACHE[params] = real
+
+
+def test_elastic_pool_weights_are_cache_lookups():
+    pool = ElasticPool(s=2, t=2, z=2, m=8, spares=2)
+    pool.fail([1])
+    info0 = pool.proto.plan.solve_cache_info()
+    pool.reconstruction_weights()
+    info1 = pool.proto.plan.solve_cache_info()
+    pool.reconstruction_weights()
+    info2 = pool.proto.plan.solve_cache_info()
+    assert info1["misses"] == info0["misses"] + 1
+    assert info2 == {**info1, "hits": info1["hits"] + 1}
+
+
+def test_elastic_replan_reuses_plan_cache():
+    pool = ElasticPool(s=2, t=2, z=2, m=8, spares=3)
+    pool.fail(list(range(12)))  # 8 alive: below N=17, (s=2,t=1) N=7 fits
+    new = pool.replan()
+    assert new is not None
+    assert new.n_workers <= int(pool.alive.sum())
+    assert new.plan is get_plan(new.scheme, new.s, new.t, new.z, new.lam,
+                                new.field, new.m)
+
+
+# --------------------------------------------------------- batched engine
+
+
+def test_engine_serves_16_request_mixed_dropout_batch():
+    """Acceptance: a 16-request mixed-dropout batch through ONE vmapped
+    front program per plan group, each Y per-request correct."""
+    eng = MPCEngine(max_batch=16)
+    rng = np.random.default_rng(0)
+    group_params = [dict(s=2, t=2, z=2, m=8), dict(s=3, t=2, z=2, m=12)]
+    want = {}
+    for i in range(16):
+        prm = group_params[i % 2]
+        proto = AGECMPCProtocol(**prm)
+        p, m = proto.field.p, prm["m"]
+        a = rng.integers(0, p, (m, m))
+        b = rng.integers(0, p, (m, m))
+        surv = None
+        if i % 3:  # heterogeneous dropout inside each group
+            surv = random_mask(rng, proto.n_workers,
+                               proto.recovery_threshold)
+        rid = eng.submit(a, b, key=jax.random.PRNGKey(i), survivors=surv,
+                         **prm)
+        want[rid] = exact_ref(a, b, p)
+    assert eng.pending() == 16
+    results = eng.flush()
+    assert eng.pending() == 0
+    assert set(results) == set(want)
+    for rid, y in results.items():
+        np.testing.assert_array_equal(np.asarray(y), want[rid],
+                                      err_msg=f"request {rid}")
+    assert eng.stats["batches"] == 2  # one vmapped dispatch per plan group
+    for prm in group_params:
+        plan = AGECMPCProtocol(**prm).plan
+        assert "vfront" in plan._runners and "vdecode" in plan._runners
+
+
+def test_engine_batches_share_one_compile_across_flushes():
+    eng = MPCEngine(max_batch=8)
+    prm = dict(s=2, t=2, z=2, m=8)
+    plan = AGECMPCProtocol(**prm).plan
+    rng = np.random.default_rng(1)
+    p = plan.p
+    for flush in range(2):
+        for i in range(4):
+            a = rng.integers(0, p, (8, 8))
+            b = rng.integers(0, p, (8, 8))
+            eng.submit(a, b, key=jax.random.PRNGKey(flush * 10 + i), **prm)
+        eng.flush()
+    vfront_1 = plan._runners["vfront"]
+    eng.submit(rng.integers(0, p, (8, 8)), rng.integers(0, p, (8, 8)),
+               key=jax.random.PRNGKey(99), **prm)
+    eng.flush()
+    assert plan._runners["vfront"] is vfront_1  # attached once, reused
+
+
+def test_engine_pool_attrition_folds_into_decode():
+    eng = MPCEngine(spares=2, max_batch=8)
+    prm = dict(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol(**prm)
+    eng.fail([2, 5], **prm)  # pool still >= N with spares: no replan
+    rng = np.random.default_rng(4)
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+    rid = eng.submit(a, b, key=jax.random.PRNGKey(0), **prm)
+    y = eng.flush()[rid]
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, proto.field.p))
+    assert eng.stats["replans"] == 0
+
+
+def test_engine_replan_escalation():
+    eng = MPCEngine(spares=1, max_batch=8)
+    prm = dict(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol(**prm)
+    rng = np.random.default_rng(5)
+    # drive the pool below N; a queued mask sized for the old worker set
+    # is dropped (counted), and the group still serves correctly
+    # 8 of 18 provisioned workers stay alive: below N=17, (s=2,t=1) fits
+    eng.fail(list(range(proto.n_workers - 7)), **prm)
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+    mask = np.ones(proto.n_workers, bool)
+    mask[0] = False
+    rid = eng.submit(a, b, key=jax.random.PRNGKey(1), survivors=mask, **prm)
+    results = eng.flush()
+    np.testing.assert_array_equal(np.asarray(results[rid]),
+                                  exact_ref(a, b, proto.field.p))
+    assert eng.stats["replans"] == 1
+    assert eng.stats["masks_dropped"] == 1
+    # subsequent flushes reuse the memoized replan
+    rid2 = eng.submit(a, b, key=jax.random.PRNGKey(2), **prm)
+    np.testing.assert_array_equal(np.asarray(eng.flush()[rid2]),
+                                  exact_ref(a, b, proto.field.p))
+    assert eng.stats["replans"] == 1
+
+
+def test_engine_infeasible_pool_fails_requests_not_flush():
+    eng = MPCEngine(spares=0, max_batch=4)
+    prm = dict(s=1, t=2, z=1, m=4)
+    proto = AGECMPCProtocol(**prm)
+    eng.fail(list(range(proto.n_workers)), **prm)  # everyone is gone
+    a = np.zeros((4, 4), np.int64)
+    rid = eng.submit(a, a, key=jax.random.PRNGKey(0), **prm)
+    # a healthy request in another plan group must still be served
+    rng = np.random.default_rng(7)
+    p = AGECMPCProtocol(s=2, t=2, z=2, m=8).field.p
+    ah = rng.integers(0, p, (8, 8))
+    bh = rng.integers(0, p, (8, 8))
+    rid_ok = eng.submit(ah, bh, key=jax.random.PRNGKey(1), s=2, t=2, z=2,
+                        m=8)
+    results = eng.flush()
+    assert rid not in results
+    assert "infeasible" in eng.failures[rid]
+    assert eng.stats["failed"] == 1
+    np.testing.assert_array_equal(np.asarray(results[rid_ok]),
+                                  exact_ref(ah, bh, p))
+
+
+def test_engine_under_threshold_mask_fails_alone():
+    """A request whose own mask intersected with pool attrition drops
+    below t²+z fails by itself; its batch siblings are still served."""
+    eng = MPCEngine(spares=2, max_batch=8)
+    prm = dict(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol(**prm)
+    t2z = proto.recovery_threshold
+    eng.fail([0], **prm)  # pool still >= N: no replan
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+    rid_ok = eng.submit(a, b, key=jax.random.PRNGKey(0), **prm)
+    # exactly t²+z alive INCLUDING dead worker 0: passes submit-time
+    # validation, under threshold once pool attrition folds in
+    doomed = np.zeros(proto.n_workers, bool)
+    doomed[:t2z] = True
+    rid_bad = eng.submit(a, b, key=jax.random.PRNGKey(1), survivors=doomed,
+                         **prm)
+    results = eng.flush()
+    np.testing.assert_array_equal(np.asarray(results[rid_ok]),
+                                  exact_ref(a, b, proto.field.p))
+    assert rid_bad not in results
+    assert "threshold" in eng.failures[rid_bad]
+    assert eng.pending() == 0
+
+
+def test_engine_validates_submit_masks():
+    eng = MPCEngine()
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    a = np.zeros((8, 8), np.int64)
+    with pytest.raises(ValueError, match="shape"):
+        eng.submit(a, a, key=jax.random.PRNGKey(0), s=2, t=2, z=2, m=8,
+                   survivors=np.ones(proto.n_workers + 2, bool))
+    bad = np.zeros(proto.n_workers, bool)
+    bad[: proto.recovery_threshold - 1] = True
+    with pytest.raises(RuntimeError, match="threshold"):
+        eng.submit(a, a, key=jax.random.PRNGKey(0), s=2, t=2, z=2, m=8,
+                   survivors=bad)

@@ -335,7 +335,11 @@ def test_run_rejects_unknown_mode():
         proto.run(a, a, jax.random.PRNGKey(0), mode="fusedd")
 
 
-def test_fused_run_with_survivors_falls_back_and_agrees():
+def test_fused_run_with_survivors_stays_on_staged_path():
+    """A non-default mask runs the SAME compiled phase-1/2 program and the
+    shared decode stage with cached survivor rows (DESIGN.md §5) — the
+    pre-refactor fallback to ``run_reference`` is gone (the no-fallback
+    guarantee itself is pinned in tests/test_elastic_engine.py)."""
     proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
     rng = np.random.default_rng(0)
     a = rng.integers(0, proto.field.p, (8, 8))
@@ -345,6 +349,11 @@ def test_fused_run_with_survivors_falls_back_and_agrees():
     y = proto.run(a, b, jax.random.PRNGKey(1), survivors=surv)
     np.testing.assert_array_equal(np.asarray(y),
                                   exact_ref(a, b, proto.field.p))
+    # the survivor set's decode table landed in the plan's LRU ...
+    idx = tuple(int(i) for i in proto._survivor_prefix(surv))
+    assert ("survivor", idx) in proto.plan._solve_cache
+    # ... and the staged programs are attached to the plan, shared by twins
+    assert "stages" in proto.plan._runners
 
 
 # ----------------------------------------------------------------- planner
@@ -379,10 +388,11 @@ def test_protocol_instances_share_plan_and_compiled_runner():
     a = rng.integers(0, pa.field.p, (8, 8))
     b = rng.integers(0, pa.field.p, (8, 8))
     pa.run(a, b, jax.random.PRNGKey(0))
-    assert "fused" in pa.plan._runners    # compiled once ...
-    runner = pa.plan._runners["fused"]
+    assert "stages" in pa.plan._runners   # staged programs built once ...
+    stages = pa.plan._runners["stages"]
     pb.run(a, b, jax.random.PRNGKey(1))
-    assert pb.plan._runners["fused"] is runner  # ... reused by the twin
+    assert pb.plan._runners["stages"] is stages  # ... reused by the twin
+    assert pb.plan.stages() is stages
 
 
 def test_plan_key_distinguishes_field_prime():
