@@ -18,6 +18,12 @@ The elastic-engine refactor (DESIGN.md §5) adds two more pair families:
 * **batched serving** — ``MPCEngine`` flushes (one vmapped program per
   plan group) vs a sequential per-request ``run`` loop, at batch sizes
   1 / 4 / 16, with requests/s in the derived column.
+
+The unified session API (DESIGN.md §6) adds a **facade overhead** pair:
+``connect(spec).matmul`` (floats in, floats out, through the shape
+adapter) vs the direct ``encode → protocol.run → decode`` pipeline on the
+same square block — the amortized session cost must stay noise-level
+(< 5% at m ≥ 128).
 """
 from __future__ import annotations
 
@@ -131,7 +137,40 @@ def main():
             emit_pair(records, f"engine_batch{bs}_m{em}", us_batch, us_seq,
                       f"req/s={bs / (us_batch / 1e6):.0f}")
 
+    facade(records)
     write_trajectory("PROTOCOL", records)
+
+
+def facade(records):
+    """Session facade vs direct protocol pipeline on one square block.
+
+    Both legs do float fixed-point encode/decode; the pair isolates what
+    the spec/session/adapter layers add on top of ``protocol.run``.
+    """
+    from repro.mpc import MPCSpec, connect
+
+    rng = np.random.default_rng(7)
+    for fm in (16, 128):
+        spec = MPCSpec(s=2, t=2, z=2, m=fm)
+        sess = connect(spec)
+        proto = spec.protocol()
+        f = spec.field
+        a = rng.standard_normal((fm, fm))
+        b = rng.standard_normal((fm, fm))
+        key = jax.random.PRNGKey(0)
+
+        def via_session():
+            return sess.matmul(a, b, key=key)
+
+        def direct():
+            return f.decode(
+                proto.run(f.encode(a).T, f.encode(b), key), products=2)
+
+        us_sess = time_us(via_session, iters=10, warmup=3, best_of=3)
+        us_direct = time_us(direct, iters=10, warmup=3, best_of=3)
+        overhead = us_sess / us_direct - 1.0
+        emit_pair(records, f"api_facade_m{fm}", us_sess, us_direct,
+                  f"overhead={overhead * 100:.1f}%")
 
 
 def smoke():
@@ -157,8 +196,20 @@ def smoke():
                        survivors=surv if i % 2 else None) for i in range(4)]
     results = eng.flush()
     assert all(np.array_equal(np.asarray(results[r]), want) for r in rids)
+
+    # the unified session facade: rectangular tiled product, exact
+    from repro.mpc import MPCSpec, connect
+
+    sess = connect(MPCSpec(s=s, t=t, z=z))
+    ar = rng.integers(0, proto.field.p, (3, 10))
+    br = rng.integers(0, proto.field.p, (10, 5))
+    yr = sess.matmul(ar, br, encoded=True)
+    want_r = np.array((ar.astype(object) @ br.astype(object))
+                      % proto.field.p, np.int64)
+    assert np.array_equal(np.asarray(yr), want_r)
     print(f"protocol smoke OK: fused, survivor, engine batch of {len(rids)} "
-          f"(stats {eng.stats})")
+          f"(stats {eng.stats}), session rect [3,10]x[10,5] "
+          f"in {sess.stats['blocks']} blocks")
 
 
 if __name__ == "__main__":

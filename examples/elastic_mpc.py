@@ -1,5 +1,6 @@
 """Elastic worker-pool demo: spares, phase-2 failures, re-planning, and
-batched serving with per-request dropout through the MPC engine.
+batched serving with per-request dropout — all through the unified
+session API (``repro.mpc.connect``).
 
     PYTHONPATH=src python examples/elastic_mpc.py
 """
@@ -10,11 +11,12 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.mpc import MPCSpec, connect  # noqa: E402
 from repro.mpc.elastic import ElasticPool  # noqa: E402
-from repro.mpc.engine import MPCEngine  # noqa: E402
 
-pool = ElasticPool(s=2, t=2, z=2, m=8, spares=3)
-n = pool.proto.n_workers
+spec = MPCSpec(s=2, t=2, z=2, m=8)
+pool = ElasticPool.from_spec(spec, spares=3)
+n = spec.n_workers
 print(f"plan: N={n} workers + {pool.spares} spares; "
       f"phase-3 tolerance {pool.phase3_tolerance()} failures")
 print(f"pool alphas extend the plan's invertible set: "
@@ -29,9 +31,9 @@ print(f"after 2 failures: quorum from workers {idx[:5].tolist()}... "
       f"solve cache {pool.proto.plan.solve_cache_info()}")
 
 # ---- batched serving with heterogeneous per-request dropout -------------
-engine = MPCEngine(spares=3, max_batch=16)
+sess = connect(spec, backend="batched", spares=3, max_batch=16)
 rng = np.random.default_rng(0)
-p = pool.proto.field.p
+p = spec.field.p
 expected = {}
 for i in range(8):
     a = rng.integers(0, p, (8, 8))
@@ -40,24 +42,23 @@ for i in range(8):
     if i % 2:  # every other request loses a random straggler set
         surv = np.ones(n, bool)
         surv[rng.choice(n, pool.phase3_tolerance(), replace=False)] = False
-    rid = engine.submit(a, b, key=jax.random.PRNGKey(i), survivors=surv,
-                        s=2, t=2, z=2, m=8)
+    rid = sess.submit(a, b, key=jax.random.PRNGKey(i), survivors=surv,
+                      encoded=True)
     expected[rid] = np.array(
-        (a.astype(object).T @ b.astype(object)) % p, np.int64)
-results = engine.flush()
+        (a.astype(object) @ b.astype(object)) % p, np.int64)
+results = sess.flush()
 ok = all(np.array_equal(np.asarray(results[r]), expected[r])
          for r in expected)
-print(f"engine: 8 mixed-dropout requests -> {len(results)} correct={ok}; "
-      f"stats {engine.stats}")
+print(f"session: 8 mixed-dropout requests -> {len(results)} correct={ok}; "
+      f"engine stats {sess.backend.engine.stats}")
 
-# catastrophic loss: below N -> the engine escalates to a coarser plan
-engine.fail(list(range(1, 14)), s=2, t=2, z=2, m=8)
+# catastrophic loss: below N -> the backend escalates to a coarser plan
+sess.fail(list(range(1, 14)))
 a = rng.integers(0, p, (8, 8))
 b = rng.integers(0, p, (8, 8))
-rid = engine.submit(a, b, key=jax.random.PRNGKey(42), s=2, t=2, z=2, m=8)
-y = engine.flush()[rid]
+y = sess.matmul(a, b, key=jax.random.PRNGKey(42), encoded=True)
 ok = np.array_equal(
-    np.asarray(y), np.array((a.astype(object).T @ b.astype(object)) % p,
+    np.asarray(y), np.array((a.astype(object) @ b.astype(object)) % p,
                             np.int64))
 print(f"after losing 13 workers: replanned and served correct={ok}; "
-      f"stats {engine.stats}")
+      f"engine stats {sess.backend.engine.stats}")

@@ -4,6 +4,11 @@ A tiny LM computes its lm_head projection under MPC — the activations
 (one party) and the weights (another party) stay private from the worker
 pool; only the logits emerge.
 
+The projection is the real serving shape: a rectangular ``[1, D] × [D, V]``
+matmul over the FULL vocabulary.  The session's shape adapter tiles it onto
+the coded ``m×m`` block grid (zero-padding is exact in the field), so no
+square-embedding or vocab-truncation tricks are needed.
+
     PYTHONPATH=src python examples/private_inference.py
 """
 import sys
@@ -11,12 +16,11 @@ import sys
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.models import transformer as tr  # noqa: E402
-from repro.mpc.secure_matmul import secure_matmul  # noqa: E402
+from repro.mpc import MPCSpec, connect  # noqa: E402
 
 cfg = reduced(get_config("llama3.2-1b"))
 params = tr.init_params(cfg, jax.random.PRNGKey(0))
@@ -31,18 +35,18 @@ head = np.asarray(params.get("lm_head", params["embed"].T), np.float32)
 # plaintext logits
 logits_plain = h_last @ head
 
-# MPC logits: Y = AᵀB with A = h_lastᵀ (source 1), B = head (source 2).
-d = cfg.d_model
-a = np.zeros((d, d), np.float32)
-a[:, 0] = h_last[0]
-cols = min(d, head.shape[1])
-b = head[:, :cols]
-bb = np.zeros((d, d), np.float32)
-bb[:, :cols] = b
-y = secure_matmul(a, bb, s=2, t=2, z=2)                   # [d, d]
-logits_mpc = np.asarray(y)[0, :cols]
+# MPC logits: one session matmul, rectangular [1, D] x [D, V] end to end
+sess = connect(MPCSpec(s=2, t=2, z=2))
+logits_mpc = np.asarray(sess.matmul(h_last, head, key=jax.random.PRNGKey(2)))
 
-err = np.abs(logits_mpc - logits_plain[0, :cols]).max()
-print(f"first {cols} logits via AGE-CMPC: max |Δ| = {err:.4f}")
+assert logits_mpc.shape == logits_plain.shape == (1, cfg.vocab)
+err = np.abs(logits_mpc - logits_plain).max()
+print(f"all {cfg.vocab} logits via AGE-CMPC ([1,{cfg.d_model}]x"
+      f"[{cfg.d_model},{cfg.vocab}] in {sess.stats['blocks']} coded blocks): "
+      f"max |Δ| = {err:.4f}")
 assert err < 0.1
+top_mpc = int(logits_mpc[0].argmax())
+top_plain = int(logits_plain[0].argmax())
+assert top_mpc == top_plain, (top_mpc, top_plain)
+print(f"greedy next token matches plaintext: {top_mpc}")
 print("private inference OK — workers saw only secret shares")

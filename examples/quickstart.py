@@ -1,7 +1,7 @@
 """Quickstart: AGE-CMPC in 40 lines.
 
 Two sources hold private matrices A and B; N workers jointly compute
-Y = AᵀB without any z-subset of them learning anything about A or B.
+their product without any z-subset of them learning anything about A or B.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +13,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import all_worker_counts, optimal_age_code  # noqa: E402
-from repro.mpc import AGECMPCProtocol  # noqa: E402
+from repro.mpc import MPCSpec, connect  # noqa: E402
 
 # 1. Plan: how many edge workers does each scheme need? (paper Fig. 2 cell)
 s, t, z = 2, 2, 2
@@ -22,22 +22,34 @@ code, lam = optimal_age_code(s, t, z)
 print(f"AGE picks gap λ*={lam}: N={code.n_workers}, "
       f"decode threshold t²+z={code.recovery_threshold}")
 
-# 2. Execute the 3-phase protocol on real data.
-m = 16
-proto = AGECMPCProtocol(s=s, t=t, z=z, m=m)
+# 2. One spec, one session, floats in / floats out — any shapes.
+spec = MPCSpec(s=s, t=t, z=z)
+sess = connect(spec)                       # backend="local" | "sharded" | "batched"
 rng = np.random.default_rng(0)
-a = rng.standard_normal((m, m))
-b = rng.standard_normal((m, m))
-f = proto.field
-y = proto.run(f.encode(a), f.encode(b), jax.random.PRNGKey(0))
-y = np.asarray(f.decode(y, products=2))
-print("max |Y - AᵀB| =", float(np.abs(y - a.T @ b).max()))
+a = rng.standard_normal((16, 16))
+b = rng.standard_normal((16, 16))
+y = np.asarray(sess.matmul(a, b))
+print("max |Y - AB| =", float(np.abs(y - a @ b).max()))
+
+# ... including rectangular: the square protocol is tiled underneath.
+yr = np.asarray(sess.matmul(rng.standard_normal((3, 20)),
+                            rng.standard_normal((20, 5))))
+print("rectangular [3,20]x[20,5] ->", yr.shape)
 
 # 3. Coded fault tolerance: kill workers down to the threshold, same answer.
-surv = np.zeros(proto.n_workers, bool)
-surv[np.arange(proto.recovery_threshold)] = True
-y2 = proto.run(f.encode(a), f.encode(b), jax.random.PRNGKey(1),
-               survivors=surv)
-y2 = np.asarray(f.decode(y2, products=2))
-print(f"decode from only {proto.recovery_threshold}/{proto.n_workers} "
-      f"workers: max err {float(np.abs(y2 - a.T @ b).max()):.4f}")
+surv = np.zeros(spec.n_workers, bool)
+surv[np.arange(spec.recovery_threshold)] = True
+y2 = np.asarray(sess.matmul(a, b, survivors=surv))
+print(f"decode from only {spec.recovery_threshold}/{spec.n_workers} "
+      f"workers: max err {float(np.abs(y2 - a @ b).max()):.4f}")
+
+# 4. Legacy surface (kept as thin shims over the session): the protocol
+#    object computes AᵀB on square field-encoded blocks.
+from repro.mpc import AGECMPCProtocol  # noqa: E402
+
+proto = AGECMPCProtocol.from_spec(spec, m=16)
+f = proto.field
+y3 = proto.run(f.encode(a), f.encode(b), jax.random.PRNGKey(0))
+y3 = np.asarray(f.decode(y3, products=2))
+print("legacy protocol.run (Y = AᵀB): max |Y - AᵀB| =",
+      float(np.abs(y3 - a.T @ b).max()))

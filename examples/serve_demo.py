@@ -1,5 +1,6 @@
 """Batched serving demo: prefill + greedy decode across model families,
-plus the batched MPC request engine (one vmapped program per plan group).
+plus MPC request serving through the unified session API — the batched
+backend turns a whole flush into the fewest vmapped program dispatches.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -8,12 +9,11 @@ import sys
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.models.api import get_model  # noqa: E402
-from repro.mpc.engine import MPCEngine  # noqa: E402
+from repro.mpc import MPCSpec, connect  # noqa: E402
 from repro.serve.engine import Engine  # noqa: E402
 
 for arch in ("llama3.2-1b", "rwkv6-1.6b"):
@@ -27,29 +27,29 @@ for arch in ("llama3.2-1b", "rwkv6-1.6b"):
     assert int(out.max()) < cfg.vocab
 print("serving OK")
 
-# ---- MPC request serving: group, vmap, per-request dropout ---------------
-mpc = MPCEngine(max_batch=16)
+# ---- MPC request serving: submit/flush on the batched backend ------------
+spec = MPCSpec(s=2, t=2, z=2)
+sess = connect(spec, backend="batched", max_batch=16)
 rng = np.random.default_rng(0)
 expected = {}
 for i in range(8):
-    # two plan groups (different m): one vmapped front program each
-    prm = dict(s=2, t=2, z=2, m=8 if i % 2 == 0 else 16)
-    from repro.mpc import AGECMPCProtocol
-
-    proto = AGECMPCProtocol(**prm)
-    p, m = proto.field.p, prm["m"]
+    # two block sizes: requests group by plan, one vmapped front each
+    m = 8 if i % 2 == 0 else 16
+    p = spec.field.p
     a = rng.integers(0, p, (m, m))
     b = rng.integers(0, p, (m, m))
     surv = None
-    if i >= 4:  # half the requests straggle
-        surv = np.ones(proto.n_workers, bool)
-        surv[rng.choice(proto.n_workers,
-                        proto.n_workers - proto.recovery_threshold,
+    if i >= 4:  # half the requests straggle down to the decode threshold
+        surv = np.ones(spec.n_workers, bool)
+        surv[rng.choice(spec.n_workers,
+                        spec.n_workers - spec.recovery_threshold,
                         replace=False)] = False
-    rid = mpc.submit(a, b, key=jax.random.PRNGKey(i), survivors=surv, **prm)
+    rid = sess.submit(a, b, key=jax.random.PRNGKey(i), survivors=surv,
+                      encoded=True, m=m)
     expected[rid] = np.array(
-        (a.astype(object).T @ b.astype(object)) % p, np.int64)
-results = mpc.flush()
+        (a.astype(object) @ b.astype(object)) % p, np.int64)
+results = sess.flush()
 assert all(np.array_equal(np.asarray(results[r]), expected[r])
            for r in expected)
-print(f"mpc serving OK: {len(results)} requests, stats {mpc.stats}")
+print(f"mpc serving OK: {len(results)} requests in one flush, "
+      f"engine stats {sess.backend.engine.stats}")

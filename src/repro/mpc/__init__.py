@@ -1,11 +1,19 @@
 """Executable CMPC layer: field, Lagrange machinery, 3-phase protocols.
 
+The unified public surface is :class:`MPCSpec` + :func:`connect`
+(DESIGN.md §6): one frozen parameterization object and one session verb
+set (``matmul`` / ``submit`` / ``flush`` / ``fail`` /
+``validate_survivors``) over the ``local``, ``sharded`` and ``batched``
+backends, with rectangular & batched operands handled by the shape
+adapter (:mod:`repro.mpc.tiling`).
+
 Plans (alphas, reconstruction weights, Vandermonde tables, staged jit
 programs, survivor-table LRUs) are memoized process-wide in
 :mod:`repro.mpc.planner`; see DESIGN.md §2 and §5.  Batched request serving
 lives in :mod:`repro.mpc.engine`, elastic worker pools in
 :mod:`repro.mpc.elastic`.
 """
+from .api import MPCSession, MPCSpec, connect
 from .field import ACC_WINDOW, DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31, acc_window
 from .planner import (
     ProtocolPlan,
@@ -21,9 +29,12 @@ __all__ = [
     "ACC_WINDOW",
     "DEFAULT_FIELD",
     "Field",
+    "MPCSession",
+    "MPCSpec",
     "P_DEFAULT",
     "P_MERSENNE31",
     "acc_window",
+    "connect",
     "AGECMPCProtocol",
     "MPCEngine",
     "ProtocolPlan",

@@ -1,0 +1,460 @@
+"""The unified MPC surface: ``MPCSpec`` + ``MPCSession`` (DESIGN.md §6).
+
+One frozen, validated **spec** replaces the ``(s, t, z, m, lam, scheme,
+field)`` kwarg blobs that ``protocol.py``, ``engine.py``, ``elastic.py``
+and ``secure_matmul.py`` each re-took, and one **session** exposes a single
+verb set over three pluggable backends:
+
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)                      # local | sharded | batched
+    y = sess.matmul(a, b)                     # floats in, floats out
+
+* :class:`MPCSpec` — scheme, partitioning, collusion bound, gap, field and
+  fixed-point encoding config in one hashable object.  It is the single
+  source of truth for plan keys (:meth:`MPCSpec.plan_key`), plan resolution
+  (:meth:`MPCSpec.plan`), protocol construction (:meth:`MPCSpec.protocol`)
+  and survivor-mask validation (:meth:`MPCSpec.validate_survivors` — the
+  public form of what used to be ``AGECMPCProtocol._survivor_prefix``).
+* :class:`MPCSession` — ``matmul(a, b)``, ``submit``/``flush``,
+  ``fail(workers)``, ``validate_survivors(mask)``.  Operands may be
+  rectangular ``[r,k]×[k,c]`` and carry leading batch dimensions; the
+  shape adapter (:mod:`repro.mpc.tiling`) maps them onto the coded ``m×m``
+  block grid, the backend executes the blocks, and the session folds field
+  encode/decode in so callers pass floats end to end.
+* backends (:mod:`repro.mpc.backends`) — ``local`` (the fused / pallas /
+  reference staged-jit paths), ``sharded`` (the mesh/``psum_scatter``
+  runner) and ``batched`` (the ``MPCEngine`` grouping/vmap machinery; a
+  tiled call becomes ONE engine flush).
+
+Key discipline: a call that maps to a single coded block consumes the
+caller's key directly — bit-identical to ``AGECMPCProtocol.run`` — while a
+multi-block call folds a per-block counter into the base key so every
+block draws distinct phase-1/2 randomness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .field import DEFAULT_FIELD, Field
+from .planner import PlanKey, ProtocolPlan, _resolve_code, get_plan
+from .tiling import DEFAULT_TILE_BUDGET, TileMap, assemble, choose_block, tile_blocks
+
+SCHEMES = ("age", "entangled", "polydot")
+
+
+# ===================================================================== spec
+@dataclasses.dataclass(frozen=True)
+class MPCSpec:
+    """Frozen, validated protocol parameterization.
+
+    Parameters
+    ----------
+    s, t : matrix partitions (the paper's s×t block grid)
+    z    : collusion bound
+    lam  : AGE gap; ``None`` solves ``min_λ`` (eq. (13))
+    scheme : "age" | "entangled" | "polydot"
+    field  : prime field + fixed-point encoding config (``Field.frac_bits``)
+    m      : optional default protocol block side (``s|m`` and ``t|m``).
+             When unset, the session's shape adapter picks a block size per
+             workload (:func:`repro.mpc.tiling.choose_block`).
+    """
+
+    s: int
+    t: int
+    z: int
+    lam: Optional[int] = None
+    scheme: str = "age"
+    field: Field = DEFAULT_FIELD
+    m: Optional[int] = None
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown scheme {self.scheme!r}: expected one of {SCHEMES}")
+        for name in ("s", "t", "z"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, np.integer)) or v < 1:
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if self.lam is not None and self.lam < 0:
+            raise ValueError(f"lam must be None or >= 0, got {self.lam!r}")
+        if not isinstance(self.field, Field):
+            raise TypeError(f"field must be a Field, got {self.field!r}")
+        if self.m is not None and (self.m < 1 or self.m % self.s
+                                   or self.m % self.t):
+            raise ValueError(
+                f"need s|m and t|m: s={self.s} t={self.t} m={self.m}")
+
+    # ------------------------------------------------------------ identity
+    def replace(self, **kw) -> "MPCSpec":
+        """A copy with the given fields replaced (validated again)."""
+        return dataclasses.replace(self, **kw)
+
+    def plan_key(self, m: Optional[int] = None) -> PlanKey:
+        """The process-wide planner-cache key for this spec (+ block side)."""
+        return (self.scheme, self.s, self.t, self.z, self.lam,
+                self.field.p, self._block(m))
+
+    def _block(self, m: Optional[int]) -> int:
+        m = self.m if m is None else m
+        if m is None:
+            raise ValueError(
+                "no block size: pass m or construct the spec with one")
+        return int(m)
+
+    # ------------------------------------------------------- derived facts
+    @property
+    def code(self):
+        """The degree-set code (memoized; independent of the block side)."""
+        return _resolve_code(self.scheme, self.s, self.t, self.z, self.lam)
+
+    @property
+    def n_workers(self) -> int:
+        return self.code.n_workers
+
+    @property
+    def recovery_threshold(self) -> int:
+        return self.t * self.t + self.z
+
+    @property
+    def frac_bits(self) -> int:
+        return self.field.frac_bits
+
+    # ----------------------------------------------------------- factories
+    def plan(self, m: Optional[int] = None) -> ProtocolPlan:
+        """The cached data-independent tables for this spec at block ``m``."""
+        return get_plan(self.scheme, self.s, self.t, self.z, self.lam,
+                        self.field, self._block(m))
+
+    def protocol(self, m: Optional[int] = None):
+        """An :class:`~repro.mpc.protocol.AGECMPCProtocol` for block ``m``."""
+        from .protocol import AGECMPCProtocol
+
+        return AGECMPCProtocol.from_spec(self, m=m)
+
+    # ------------------------------------------------- survivor validation
+    def validate_survivors(self, survivors) -> np.ndarray:
+        """First ``t²+z`` alive worker indices for a survivor mask.
+
+        The public survivor-mask contract (formerly the protocol-private
+        ``_survivor_prefix``): raises ``ValueError`` on a mis-shaped mask
+        and ``RuntimeError`` when fewer than ``t²+z`` workers survive
+        (beyond coded tolerance).  The returned prefix is the decode
+        quorum; its frozen tuple keys the plan's survivor-table LRU.
+        """
+        t2z = self.recovery_threshold
+        n = self.n_workers
+        alive = (np.ones(n, bool) if survivors is None
+                 else np.asarray(survivors, bool))
+        if alive.shape != (n,):
+            raise ValueError(
+                f"survivors mask must have shape ({n},), got {alive.shape}")
+        idx = np.nonzero(alive)[0]
+        if len(idx) < t2z:
+            raise RuntimeError(
+                f"only {len(idx)} workers alive < threshold {t2z}")
+        return idx[:t2z]
+
+
+# ================================================================== blocks
+@dataclasses.dataclass(frozen=True)
+class BlockOp:
+    """One coded ``m×m`` block product ``Y = AᵀB`` for a backend to run."""
+
+    proto: Any                       # AGECMPCProtocol
+    a: jnp.ndarray                   # [m, m] field elements (the Aᵀ operand)
+    b: jnp.ndarray                   # [m, m] field elements
+    key: jnp.ndarray
+    survivors: Optional[np.ndarray]  # bool [N] or None
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockFailure:
+    """A block a backend could not serve (below threshold, infeasible)."""
+
+    reason: str
+
+
+@dataclasses.dataclass
+class _Request:
+    """One logical session matmul: its block ops + how to reassemble."""
+
+    rid: int
+    ops: List[BlockOp]
+    build: Callable[[List[jnp.ndarray]], jnp.ndarray]
+
+
+# ================================================================= session
+class MPCSession:
+    """One verb set over a pluggable backend (obtain via :func:`connect`).
+
+    * :meth:`matmul` — rectangular/batched float (or field) matmul;
+    * :meth:`submit` / :meth:`flush` — queue many matmuls, serve together
+      (on the batched backend a whole flush is ONE engine flush);
+    * :meth:`fail` — report worker attrition (folded into later decodes;
+      the batched backend escalates through its elastic pools);
+    * :meth:`validate_survivors` — the spec's public mask validation.
+    """
+
+    def __init__(self, spec: MPCSpec, backend, *, key=None,
+                 tile_budget: int = DEFAULT_TILE_BUDGET):
+        self.spec = spec
+        self.backend = backend
+        self._root_key = (jax.random.PRNGKey(0) if key is None
+                          else jnp.asarray(key))
+        self._calls = 0
+        self._dead: set = set()
+        self._pending: List[_Request] = []
+        self._next_rid = 0
+        self._tile_budget = tile_budget
+        self.failures: Dict[int, str] = {}
+        self.stats = {"matmuls": 0, "blocks": 0, "flushes": 0}
+
+    # ------------------------------------------------------------- helpers
+    def validate_survivors(self, survivors) -> np.ndarray:
+        """Public survivor-mask validation (see ``MPCSpec``)."""
+        return self.spec.validate_survivors(survivors)
+
+    def fail(self, workers) -> None:
+        """Mark logical workers dead for every later matmul/flush.
+
+        Local/sharded backends fold the dead set into each decode's
+        survivor mask (phase-3 coded tolerance); the batched backend
+        additionally reports attrition to its elastic pools, so spares and
+        replan escalation engage exactly as under ``MPCEngine.fail``.
+        """
+        self._dead.update(int(w) for w in np.atleast_1d(
+            np.asarray(workers, np.int64)).tolist())
+        self.backend.fail(frozenset(self._dead))
+
+    def _serve_ops(self, ops: List[BlockOp]) -> List[BlockOp]:
+        """Fold session attrition into each block's decode mask at serve
+        time (mirroring the engine, which folds pool attrition per flush).
+        Backends that own their pool machinery skip the fold — their
+        elastic pools already see the dead set."""
+        if self.backend.handles_attrition or not self._dead:
+            return ops
+        alive = np.ones(self.spec.n_workers, bool)
+        for w in self._dead:
+            if w < alive.size:
+                alive[w] = False
+        return [dataclasses.replace(
+            op, survivors=(alive if op.survivors is None
+                           else alive & np.asarray(op.survivors, bool)))
+            for op in ops]
+
+    def _next_key(self, key) -> jnp.ndarray:
+        if key is not None:
+            return jnp.asarray(key)
+        k = jax.random.fold_in(self._root_key, self._calls)
+        return k
+
+    # -------------------------------------------------------- one matmul
+    def matmul(self, a, b, *, key=None, survivors: Optional[np.ndarray] = None,
+               encoded: bool = False, m: Optional[int] = None):
+        """``a @ b`` under MPC, any ``[..., r, k] × [..., k, c]`` shapes.
+
+        Floats go through the spec field's fixed-point encode/decode; pass
+        ``encoded=True`` to treat operands as field elements and get the
+        exact ``(a @ b) mod p`` back (bit-exact, no fixed point).
+        ``survivors`` is a bool ``[N]`` decode mask applied to every block;
+        ``m`` overrides the spec/adapter block side for this call.
+        """
+        req = self._build_request(a, b, key=key, survivors=survivors,
+                                  encoded=encoded, m=m)
+        outs = []
+        if req.ops:
+            outs = self.backend.run_blocks(self._serve_ops(req.ops))
+            self.stats["flushes"] += 1   # one backend dispatch round
+        for out in outs:
+            if isinstance(out, BlockFailure):
+                raise RuntimeError(out.reason)
+        return req.build(outs)
+
+    # ----------------------------------------------------- submit / flush
+    def submit(self, a, b, *, key=None,
+               survivors: Optional[np.ndarray] = None,
+               encoded: bool = False, m: Optional[int] = None) -> int:
+        """Queue one matmul; returns its request id (serve via :meth:`flush`)."""
+        req = self._build_request(a, b, key=key, survivors=survivors,
+                                  encoded=encoded, m=m)
+        self._pending.append(req)
+        return req.rid
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> Dict[int, jnp.ndarray]:
+        """Serve every queued request; returns ``{rid: result}``.
+
+        All queued requests' blocks go to the backend as ONE op list (the
+        batched backend turns that into one engine flush).  Failures are
+        isolated per request in :attr:`failures` (``rid → reason``,
+        replaced each flush), mirroring ``MPCEngine`` semantics.
+        """
+        queue, self._pending = self._pending, []
+        self.failures = {}
+        ops: List[BlockOp] = []
+        for req in queue:
+            ops.extend(req.ops)
+        outs = []
+        if ops:
+            outs = self.backend.run_blocks(self._serve_ops(ops))
+            self.stats["flushes"] += 1   # one backend dispatch round
+
+        results: Dict[int, jnp.ndarray] = {}
+        pos = 0
+        for req in queue:
+            chunk = outs[pos: pos + len(req.ops)]
+            pos += len(req.ops)
+            bad = next((o for o in chunk if isinstance(o, BlockFailure)), None)
+            if bad is not None:
+                self.failures[req.rid] = bad.reason
+                continue
+            results[req.rid] = req.build(chunk)
+        return results
+
+    # -------------------------------------------------- request construction
+    def _build_request(self, a, b, *, key, survivors, encoded, m) -> _Request:
+        f = self.spec.field
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        a_vec, b_vec = a.ndim == 1, b.ndim == 1
+        if a_vec:
+            a = a[None, :]
+        if b_vec:
+            b = b[:, None]
+        if a.ndim < 2 or b.ndim < 2 or a.shape[-1] != b.shape[-2]:
+            raise ValueError(
+                f"matmul shapes do not align: {a.shape} x {b.shape}")
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+        if not jnp.issubdtype(out_dtype, jnp.floating):
+            out_dtype = jnp.float64
+        ea = a if encoded else f.encode(a)
+        eb = b if encoded else f.encode(b)
+        ea = jnp.asarray(ea, jnp.int64) % f.p
+        eb = jnp.asarray(eb, jnp.int64) % f.p
+
+        kdim = a.shape[-1]
+        if b.ndim == 2:
+            # the common serving shape: fold every leading dim of a into
+            # rows — one 2-D tiled product regardless of batch depth
+            lead = a.shape[:-1]
+            r = int(np.prod(lead, dtype=np.int64)) if lead else 1
+            pieces = [(ea.reshape(r, kdim), eb)]
+            out_shape: Tuple[int, ...] = tuple(lead) + (b.shape[-1],)
+        else:
+            bshape = np.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+            eab = jnp.broadcast_to(
+                ea, bshape + a.shape[-2:]).reshape((-1,) + a.shape[-2:])
+            ebb = jnp.broadcast_to(
+                eb, bshape + b.shape[-2:]).reshape((-1,) + b.shape[-2:])
+            pieces = [(eab[i], ebb[i]) for i in range(eab.shape[0])]
+            out_shape = tuple(bshape) + (a.shape[-2], b.shape[-1])
+            r = a.shape[-2]
+        c = b.shape[-1]
+
+        b_folded = b.ndim == 2   # keep only the flag, not the operand
+        if min(r, kdim, c) == 0 or not pieces:
+            # np.matmul semantics without protocol work: an empty
+            # contraction sums to zero, empty rows/cols give empty output
+            if survivors is not None:
+                self.spec.validate_survivors(survivors)
+            zeros = jnp.zeros(out_shape, jnp.int64 if encoded else out_dtype)
+            if b_vec:
+                zeros = zeros[..., 0]
+            if a_vec:
+                zeros = zeros[0] if b_folded else zeros[..., 0, :]
+            return self._finish_request([], lambda outs: zeros)
+
+        if m is not None:
+            # route the override through the spec so the s|m / t|m rule
+            # lives in exactly one place
+            block = self.spec.replace(m=int(m)).m
+        elif self.spec.m:
+            block = self.spec.m
+        else:
+            block = choose_block(self.spec.s, self.spec.t, r, kdim, c,
+                                 budget=self._tile_budget)
+        proto = self.spec.protocol(block)
+        tm = TileMap(m=block, r=r, k=kdim, c=c)
+        eff: Optional[np.ndarray] = None
+        if survivors is not None:
+            self.spec.validate_survivors(survivors)  # shape + threshold
+            eff = np.asarray(survivors, bool)
+        base = self._next_key(key)
+        self._calls += 1
+
+        n_ops = tm.n_blocks * len(pieces)
+        # exact-fit single block: no tiling, no padding, no reassembly —
+        # the facade collapses to one protocol call on the operands
+        clean = n_ops == 1 and (r, kdim, c) == (block, block, block)
+        ops: List[BlockOp] = []
+        for pa, pb in pieces:
+            if clean:
+                ops.append(BlockOp(proto=proto, a=pa.T, b=pb, key=base,
+                                   survivors=eff))
+                continue
+            ta = tile_blocks(pa, block)          # [gr, gk, m, m]
+            tb = tile_blocks(pb, block)          # [gk, gc, m, m]
+            for i in range(tm.gr):
+                for j in range(tm.gc):
+                    for l in range(tm.gk):
+                        # single-block calls consume the caller's key
+                        # directly: bit-identical to protocol.run
+                        bk = (base if n_ops == 1
+                              else jax.random.fold_in(base, len(ops)))
+                        ops.append(BlockOp(
+                            proto=proto, a=ta[i, l].T, b=tb[l, j],
+                            key=bk, survivors=eff))
+
+        n_pieces = len(pieces)
+
+        def build(outs: List[jnp.ndarray]) -> jnp.ndarray:
+            per = tm.n_blocks
+            mats = (outs if clean else
+                    [assemble(tm, outs[i * per:(i + 1) * per], f.p)
+                     for i in range(n_pieces)])
+            y = mats[0] if n_pieces == 1 else jnp.stack(mats)
+            if encoded:
+                out = y.reshape(out_shape)
+            else:
+                out = f.decode(y, products=2).reshape(out_shape).astype(
+                    out_dtype)
+            if b_vec:
+                out = out[..., 0]
+            if a_vec:
+                out = out[0] if b_folded else out[..., 0, :]
+            return out
+
+        return self._finish_request(ops, build)
+
+    def _finish_request(self, ops: List[BlockOp],
+                        build: Callable) -> _Request:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.stats["matmuls"] += 1
+        self.stats["blocks"] += len(ops)
+        return _Request(rid=rid, ops=ops, build=build)
+
+
+# ================================================================= connect
+def connect(spec: MPCSpec, backend: str = "local", **opts) -> MPCSession:
+    """Open an :class:`MPCSession` over one of the pluggable backends.
+
+    ``backend``: ``"local"`` (default; ``mode="fused"|"pallas"|"reference"``),
+    ``"sharded"`` (requires ``mesh=``, optional ``axis``, ``wire_dtype``,
+    ``prg_masks``) or ``"batched"`` (optional ``spares``, ``max_batch``) —
+    or an already-constructed backend instance.  Session-level options:
+    ``key`` (base PRNG key) and ``tile_budget`` (shape-adapter dispatch cap).
+    """
+    from .backends import resolve_backend
+
+    key = opts.pop("key", None)
+    tile_budget = opts.pop("tile_budget", DEFAULT_TILE_BUDGET)
+    be = resolve_backend(backend, **opts)
+    return MPCSession(spec, be, key=key, tile_budget=tile_budget)

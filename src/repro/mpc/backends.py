@@ -1,0 +1,185 @@
+"""Pluggable execution backends for :class:`repro.mpc.api.MPCSession`.
+
+A backend runs a list of coded block products (``BlockOp``: protocol +
+field-domain ``m×m`` operands + key + survivor mask) and returns one
+field-domain result — or a ``BlockFailure`` — per op, in order:
+
+* :class:`LocalBackend` — the single-process staged-jit paths of
+  ``AGECMPCProtocol.run`` (``mode="fused"`` default, ``"pallas"`` or
+  ``"reference"``); one dispatch per block through the plan's compiled
+  programs.
+* :class:`ShardedBackend` — the mesh runner
+  (:class:`repro.mpc.secure_matmul.ShardedCMPC`): phases 1–2 shard over a
+  named axis with the exchange as one ``psum_scatter``; runner instances
+  are cached per plan key.
+* :class:`BatchedBackend` — the grouping/vmap machinery of
+  :class:`repro.mpc.engine.MPCEngine`: the whole op list is submitted and
+  served in ONE engine flush (one vmapped ``front`` per plan group, one
+  vmapped ``decode`` per survivor pattern).  Session-level attrition
+  (``MPCSession.fail``) routes into the engine's elastic pools, so spares
+  and replan escalation behave exactly as under direct engine use.
+
+Failure isolation is uniform: a block the backend cannot serve (mask
+below ``t²+z``, infeasible pool) becomes a ``BlockFailure`` in its slot
+and never takes down the other blocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Union
+
+from .api import BlockFailure, BlockOp
+
+BlockResult = Union[Any, BlockFailure]  # a field-domain array, or a failure
+
+
+class MPCBackend:
+    """Backend interface: run blocks, optionally own attrition handling."""
+
+    name = "abstract"
+    # True when the backend tracks dead workers itself (elastic pools);
+    # otherwise the session folds its dead set into each block's mask
+    handles_attrition = False
+
+    def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
+        raise NotImplementedError
+
+    def fail(self, dead: frozenset) -> None:
+        """Receive the session's cumulative dead-worker set (ids)."""
+
+
+class LocalBackend(MPCBackend):
+    """Single-process staged-jit execution (fused / pallas / reference)."""
+
+    name = "local"
+
+    def __init__(self, *, mode: str = "fused"):
+        if mode not in ("fused", "pallas", "reference"):
+            raise ValueError(
+                f"unknown mode {mode!r}: expected fused|pallas|reference")
+        self.mode = mode
+
+    def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
+        outs: List[BlockResult] = []
+        for op in ops:
+            try:
+                outs.append(op.proto.run(op.a, op.b, op.key,
+                                         survivors=op.survivors,
+                                         mode=self.mode))
+            except RuntimeError as e:  # below-threshold mask: isolate
+                outs.append(BlockFailure(str(e)))
+        return outs
+
+
+class ShardedBackend(MPCBackend):
+    """Mesh-axis execution through ``ShardedCMPC`` (one runner per plan)."""
+
+    name = "sharded"
+
+    def __init__(self, *, mesh, axis: str = "model",
+                 wire_dtype: str = "int64", prg_masks: bool = False):
+        if mesh is None:
+            raise ValueError("the sharded backend requires mesh=...")
+        self.mesh = mesh
+        self.axis = axis
+        self.wire_dtype = wire_dtype
+        self.prg_masks = prg_masks
+        self._runners: Dict[tuple, object] = {}
+
+    def _runner(self, proto):
+        from .secure_matmul import ShardedCMPC
+
+        key = proto.plan_key
+        sh = self._runners.get(key)
+        if sh is None:
+            sh = self._runners[key] = ShardedCMPC(
+                proto, self.mesh, self.axis, wire_dtype=self.wire_dtype,
+                prg_masks=self.prg_masks)
+        return sh
+
+    def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
+        outs: List[BlockResult] = []
+        for op in ops:
+            try:
+                outs.append(self._runner(op.proto).run(
+                    op.a, op.b, op.key, survivors=op.survivors))
+            except RuntimeError as e:
+                outs.append(BlockFailure(str(e)))
+        return outs
+
+
+class BatchedBackend(MPCBackend):
+    """Engine-backed execution: one ``MPCEngine`` flush per op list."""
+
+    name = "batched"
+    handles_attrition = True
+
+    def __init__(self, *, spares: int = 2, max_batch: int = 64, engine=None):
+        from .engine import MPCEngine
+
+        self.engine = engine if engine is not None else MPCEngine(
+            spares=spares, max_batch=max_batch)
+        self._dead: frozenset = frozenset()
+
+    def fail(self, dead: frozenset) -> None:
+        self._dead = frozenset(dead)
+
+    def _report_attrition(self, proto) -> None:
+        if not self._dead:
+            return
+        pool = self.engine.pool(spec=proto.spec)
+        ids = [w for w in sorted(self._dead) if w < pool.pool_size]
+        if ids:
+            pool.fail(ids)
+
+    def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
+        if not ops:  # never flush a (possibly shared) engine for nothing
+            return []
+        if self._dead:  # once per distinct plan, not once per block
+            seen = set()
+            for op in ops:
+                if op.proto.plan_key not in seen:
+                    seen.add(op.proto.plan_key)
+                    self._report_attrition(op.proto)
+        rids = []
+        for op in ops:
+            try:
+                rids.append(self.engine.submit(
+                    op.a, op.b, key=op.key, survivors=op.survivors,
+                    spec=op.proto.spec))
+            except RuntimeError as e:  # submit-time mask validation
+                rids.append(BlockFailure(str(e)))
+        results = self.engine.flush()
+        outs: List[BlockResult] = []
+        for rid in rids:
+            if isinstance(rid, BlockFailure):
+                outs.append(rid)
+            elif rid in results:
+                outs.append(results[rid])
+            else:
+                outs.append(BlockFailure(
+                    self.engine.failures.get(rid, "request not served")))
+        return outs
+
+
+BACKENDS = {
+    "local": LocalBackend,
+    "sharded": ShardedBackend,
+    "batched": BatchedBackend,
+}
+
+
+def resolve_backend(backend: Union[str, MPCBackend],
+                    **opts) -> MPCBackend:
+    """A backend instance from a name (+ options) or a ready instance."""
+    if isinstance(backend, MPCBackend):
+        if opts:
+            raise ValueError(
+                f"backend options {sorted(opts)} ignored for an instance")
+        return backend
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}: expected one of "
+            f"{sorted(BACKENDS)} or an MPCBackend instance") from None
+    return cls(**opts)

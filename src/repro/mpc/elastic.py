@@ -36,6 +36,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from .api import MPCSpec
 from .field import DEFAULT_FIELD, Field
 from .planner import _resolve_code
 from .protocol import AGECMPCProtocol
@@ -54,10 +55,22 @@ class ElasticPool:
     lam: Optional[int] = None
     field: Field = DEFAULT_FIELD
 
+    @classmethod
+    def from_spec(cls, spec: MPCSpec, *, spares: int = 2,
+                  m: Optional[int] = None) -> "ElasticPool":
+        """A pool for one unified spec (block side from ``m`` or ``spec.m``)."""
+        return cls(s=spec.s, t=spec.t, z=spec.z, m=spec._block(m),
+                   spares=spares, scheme=spec.scheme, lam=spec.lam,
+                   field=spec.field)
+
+    @property
+    def spec(self) -> MPCSpec:
+        return self.proto.spec
+
     def __post_init__(self):
-        self.proto = AGECMPCProtocol(
-            s=self.s, t=self.t, z=self.z, m=self.m, lam=self.lam,
-            scheme=self.scheme, field=self.field)
+        self.proto = AGECMPCProtocol.from_spec(MPCSpec(
+            s=self.s, t=self.t, z=self.z, lam=self.lam,
+            scheme=self.scheme, field=self.field, m=self.m))
         self.pool_size = self.proto.n_workers + self.spares
         self.alive = np.ones(self.pool_size, dtype=bool)
         # the plan's α-set (invertibility-searched, possibly re-seeded)
@@ -122,5 +135,6 @@ class ElasticPool:
         if best is None:
             return None
         _, s, t = best
-        return AGECMPCProtocol(s=s, t=t, z=self.z, m=self.m, lam=self.lam,
-                               scheme=self.scheme, field=self.field)
+        return AGECMPCProtocol.from_spec(MPCSpec(
+            s=s, t=t, z=self.z, lam=self.lam, scheme=self.scheme,
+            field=self.field, m=self.m))

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .api import MPCSpec
 from .elastic import ElasticPool
 from .field import DEFAULT_FIELD, Field
 from .planner import PlanKey
@@ -66,9 +67,16 @@ class MPCRequest:
     survivors: Optional[np.ndarray]  # bool [N] or None (all alive)
 
 
-def _plan_key(proto: AGECMPCProtocol) -> PlanKey:
-    return (proto.scheme, proto.s, proto.t, proto.z, proto.lam,
-            proto.field.p, proto.m)
+def _resolve_proto(spec: Optional[MPCSpec], m: Optional[int], s, t, z,
+                   lam, scheme, field) -> AGECMPCProtocol:
+    """One protocol from either a spec (+ optional block override) or the
+    legacy kwarg blob — the shim that keeps old call sites working."""
+    if spec is not None:
+        return AGECMPCProtocol.from_spec(spec, m=m)
+    if s is None or t is None or z is None or m is None:
+        raise TypeError("pass spec=MPCSpec(...) or all of s, t, z, m")
+    return AGECMPCProtocol.from_spec(
+        MPCSpec(s=s, t=t, z=z, lam=lam, scheme=scheme, field=field, m=m))
 
 
 def _pad_pow2(n: int, cap: int) -> int:
@@ -96,42 +104,47 @@ class MPCEngine:
         self.failures: Dict[int, str] = {}
 
     # ------------------------------------------------------------- pools
-    def pool(self, *, s: int, t: int, z: int, m: int,
+    def pool(self, *, spec: Optional[MPCSpec] = None, s: int = None,
+             t: int = None, z: int = None, m: int = None,
              lam: Optional[int] = None, scheme: str = "age",
              field: Field = DEFAULT_FIELD) -> ElasticPool:
-        """The elastic pool backing one plan group (created lazily)."""
-        proto = AGECMPCProtocol(s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
-                                field=field)
-        key = _plan_key(proto)
+        """The elastic pool backing one plan group (created lazily).
+
+        Takes a unified ``spec`` (preferred) or the legacy kwarg blob.
+        """
+        proto = _resolve_proto(spec, m, s, t, z, lam, scheme, field)
+        key = proto.plan_key
         pool = self._pools.get(key)
         if pool is None:
-            pool = self._pools[key] = ElasticPool(
-                s=s, t=t, z=z, m=m, spares=self.spares, scheme=scheme,
-                lam=lam, field=field)
+            pool = self._pools[key] = ElasticPool.from_spec(
+                proto.spec, spares=self.spares)
         return pool
 
-    def fail(self, workers, *, s: int, t: int, z: int, m: int,
+    def fail(self, workers, *, spec: Optional[MPCSpec] = None,
+             s: int = None, t: int = None, z: int = None, m: int = None,
              lam: Optional[int] = None, scheme: str = "age",
              field: Field = DEFAULT_FIELD) -> None:
         """Report worker attrition for one plan group's pool."""
-        self.pool(s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
+        self.pool(spec=spec, s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
                   field=field).fail(workers)
 
     # ------------------------------------------------------------- queue
-    def submit(self, a, b, *, key, s: int, t: int, z: int, m: int,
+    def submit(self, a, b, *, key, spec: Optional[MPCSpec] = None,
+               s: int = None, t: int = None, z: int = None, m: int = None,
                survivors: Optional[np.ndarray] = None,
                lam: Optional[int] = None, scheme: str = "age",
                field: Field = DEFAULT_FIELD) -> int:
         """Queue one ``Y = AᵀB`` request; returns its request id.
 
-        ``survivors`` (bool [N], optional) is this request's phase-3
-        dropout/straggler mask, validated against the submit-time protocol.
+        The parameterization is a unified ``spec`` (preferred; ``m`` may
+        override its block side) or the legacy kwarg blob.  ``survivors``
+        (bool [N], optional) is this request's phase-3 dropout/straggler
+        mask, validated against the submit-time spec.
         """
-        proto = AGECMPCProtocol(s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
-                                field=field)
+        proto = _resolve_proto(spec, m, s, t, z, lam, scheme, field)
         if survivors is not None:
             survivors = np.asarray(survivors, bool)
-            proto._survivor_prefix(survivors)  # shape + threshold checks
+            proto.spec.validate_survivors(survivors)  # shape + threshold
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(MPCRequest(
@@ -150,7 +163,7 @@ class MPCEngine:
         for _ in range(len(self._pools) + 2):  # replan chains are short
             replanned = self._replans.get(key)
             if replanned is not None:
-                key, proto = _plan_key(replanned), replanned
+                key, proto = replanned.plan_key, replanned
                 continue
             pool = self._pools.get(key)
             if pool is None or pool.alive.sum() >= proto.n_workers:
@@ -186,7 +199,7 @@ class MPCEngine:
         queue, self._queue = self._queue, []
         groups: "OrderedDict[PlanKey, List[MPCRequest]]" = OrderedDict()
         for req in queue:
-            groups.setdefault(_plan_key(req.proto), []).append(req)
+            groups.setdefault(req.proto.plan_key, []).append(req)
         results: Dict[int, np.ndarray] = {}
         self.failures = {}
         for key, reqs in groups.items():
@@ -196,7 +209,7 @@ class MPCEngine:
                 for req in reqs:
                     self._fail_request(req, str(e))
                 continue
-            replanned = _plan_key(serving) != key
+            replanned = serving.plan_key != key
             for lo in range(0, len(reqs), self.max_batch):
                 self._flush_batch(serving, replanned,
                                   reqs[lo:lo + self.max_batch], results)
@@ -209,7 +222,7 @@ class MPCEngine:
         stages = plan.stages()
         n = proto.n_workers
         # pool attrition among the first N folds into every request's mask
-        pool = self._pools.get(_plan_key(proto))
+        pool = self._pools.get(proto.plan_key)
         pool_mask = (pool.alive[:n] if pool is not None
                      else np.ones(n, bool))
         # pad to the next power of two with repeats of the last request so
@@ -236,7 +249,7 @@ class MPCEngine:
                 else:
                     mask &= req.survivors
             try:
-                idx = proto._survivor_prefix(mask)
+                idx = proto.spec.validate_survivors(mask)
             except RuntimeError as e:
                 # request mask ∩ pool attrition under threshold: this
                 # request fails alone, the rest of the batch is served

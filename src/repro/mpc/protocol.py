@@ -40,9 +40,10 @@ import numpy as np
 
 from ..core.age import GeneralizedPolyCode
 from ..kernels.barrett import mod_p
+from .api import MPCSpec
 from .field import DEFAULT_FIELD, Field, acc_window
 from .lagrange import inv_mod, vandermonde
-from .planner import ProtocolPlan, get_plan
+from .planner import PlanKey, ProtocolPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,12 +77,31 @@ class AGECMPCProtocol:
         if self.m % self.s or self.m % self.t:
             raise ValueError(f"need s|m and t|m: s={self.s} t={self.t} m={self.m}")
 
+    # ------------------------------------------------------------------ spec
+    @classmethod
+    def from_spec(cls, spec: MPCSpec, m: Optional[int] = None
+                  ) -> "AGECMPCProtocol":
+        """A protocol instance for one :class:`~repro.mpc.api.MPCSpec`
+        at block side ``m`` (defaults to ``spec.m``)."""
+        return cls(s=spec.s, t=spec.t, z=spec.z, m=spec._block(m),
+                   lam=spec.lam, scheme=spec.scheme, field=spec.field)
+
+    @cached_property
+    def spec(self) -> MPCSpec:
+        """This instance's parameterization as the unified spec object."""
+        return MPCSpec(s=self.s, t=self.t, z=self.z, lam=self.lam,
+                       scheme=self.scheme, field=self.field, m=self.m)
+
+    @property
+    def plan_key(self) -> PlanKey:
+        """The process-wide planner-cache key (via the spec)."""
+        return self.spec.plan_key()
+
     # ------------------------------------------------------------------ plan
     @cached_property
     def plan(self) -> ProtocolPlan:
         """The cached data-independent tables (shared across instances)."""
-        return get_plan(self.scheme, self.s, self.t, self.z, self.lam,
-                        self.field, self.m)
+        return self.spec.plan()
 
     @property
     def code(self) -> GeneralizedPolyCode:
@@ -195,25 +215,19 @@ class AGECMPCProtocol:
         return i_pts
 
     # -------------------------------------------------------------- phase 3
-    def _survivor_prefix(self, survivors: Optional[np.ndarray]) -> np.ndarray:
+    def survivor_prefix(self, survivors: Optional[np.ndarray]) -> np.ndarray:
         """First ``t²+z`` alive worker indices for a survivor mask.
 
-        Raises if the mask is mis-shaped or fewer than ``t²+z`` survive
+        The public survivor-mask contract, shared with every other entry
+        point through :meth:`repro.mpc.api.MPCSpec.validate_survivors`:
+        raises if the mask is mis-shaped or fewer than ``t²+z`` survive
         (beyond coded tolerance).  The prefix is the decode quorum; its
         frozen tuple keys the plan's survivor-table LRU.
         """
-        t2z = self.recovery_threshold
-        alive = (np.ones(self.n_workers, bool) if survivors is None
-                 else np.asarray(survivors, bool))
-        if alive.shape != (self.n_workers,):
-            raise ValueError(
-                f"survivors mask must have shape ({self.n_workers},), got "
-                f"{alive.shape}")
-        idx = np.nonzero(alive)[0]
-        if len(idx) < t2z:
-            raise RuntimeError(
-                f"only {len(idx)} workers alive < threshold {t2z}")
-        return idx[:t2z]
+        return self.spec.validate_survivors(survivors)
+
+    # retired private spelling, kept for older call sites
+    _survivor_prefix = survivor_prefix
 
     def decode(self, i_points, survivors: Optional[np.ndarray] = None):
         """Master reconstructs Y from any t²+z surviving I(α_n) points.
@@ -230,7 +244,7 @@ class AGECMPCProtocol:
         same single program ``run(survivors=...)`` and the batched engine
         use, window-safe for any supported prime (DESIGN.md §3, §5).
         """
-        idx = self._survivor_prefix(survivors)
+        idx = self.survivor_prefix(survivors)
         idx_j, rows_j = self.plan.survivor_tables(tuple(idx))
         return self.plan.stages().decode(
             jnp.asarray(i_points, jnp.int64), idx_j, rows_j)
@@ -273,7 +287,7 @@ class AGECMPCProtocol:
         b = jnp.asarray(b, jnp.int64)
         if survivors is None:
             return stages.fused(a, b, key)
-        idx = self._survivor_prefix(survivors)
+        idx = self.survivor_prefix(survivors)
         idx_j, rows_j = self.plan.survivor_tables(tuple(idx))
         i_pts = stages.front(a, b, key)
         return stages.decode(i_pts, idx_j, rows_j)
@@ -347,7 +361,7 @@ class AGECMPCProtocol:
 
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
-        dec_idx = self._survivor_prefix(survivors)
+        dec_idx = self.survivor_prefix(survivors)
         dec_rows = self.plan.survivor_rows(tuple(dec_idx))
 
         p = self.field.p

@@ -18,15 +18,15 @@ runner (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..parallel.compat import shard_map
+from .api import MPCSpec
 from .field import Field
 from .protocol import AGECMPCProtocol
 
@@ -99,6 +99,17 @@ class ShardedCMPC:
     axis: str = "model"
     wire_dtype: str = "int64"
     prg_masks: bool = False
+
+    @classmethod
+    def from_spec(cls, spec: MPCSpec, mesh: Mesh, *, axis: str = "model",
+                  m: Optional[int] = None, **kw) -> "ShardedCMPC":
+        """A sharded runner for one unified spec (block side ``m`` or
+        ``spec.m``); ``kw`` passes the optimization knobs through."""
+        return cls(AGECMPCProtocol.from_spec(spec, m=m), mesh, axis, **kw)
+
+    @property
+    def spec(self) -> MPCSpec:
+        return self.proto.spec
 
     @property
     def axis_size(self) -> int:
@@ -226,21 +237,26 @@ def secure_matmul(a, b, *, s: int, t: int, z: int,
                   field: Optional[Field] = None,
                   mesh: Optional[Mesh] = None, axis: str = "model",
                   key=None, scheme: str = "age"):
-    """``AᵀB`` for real-valued ``a, b`` via CMPC.  Composable module entry.
+    """``AᵀB`` for real-valued square ``a, b`` via CMPC (legacy shim).
 
-    With ``mesh`` given, phases 1-2 run sharded over ``axis``; otherwise the
-    single-process simulation is used (CI/CPU).
+    Thin delegation to the unified session API
+    (:func:`repro.mpc.connect`): the spec pins the block side to
+    ``a.shape[0]``, so the session maps the call onto exactly one coded
+    block consuming ``key`` directly — bit-identical to the historical
+    ``encode → AGECMPCProtocol.run → decode`` pipeline.  With ``mesh``
+    given, phases 1-2 run sharded over ``axis``; otherwise the
+    single-process simulation is used (CI/CPU).  New code should call
+    ``connect(spec).matmul`` — it also accepts rectangular and batched
+    operands.
     """
+    from .api import connect
+
     a = jnp.asarray(a)
-    m = a.shape[0]
-    proto = AGECMPCProtocol(
-        s=s, t=t, z=z, m=m, scheme=scheme,
-        **({"field": field} if field else {}))
-    f = proto.field
-    key = key if key is not None else jax.random.PRNGKey(0)
-    ea, eb = f.encode(a), f.encode(b)
+    spec = MPCSpec(s=s, t=t, z=z, scheme=scheme, m=int(a.shape[0]),
+                   **({"field": field} if field else {}))
     if mesh is not None:
-        y = ShardedCMPC(proto, mesh, axis).run(ea, eb, key)
+        sess = connect(spec, backend="sharded", mesh=mesh, axis=axis)
     else:
-        y = proto.run(ea, eb, key)
-    return f.decode(y, products=2).astype(a.dtype)
+        sess = connect(spec, backend="local")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return sess.matmul(a.T, b, key=key).astype(a.dtype)

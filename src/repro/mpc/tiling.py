@@ -1,0 +1,124 @@
+"""Shape adapter: rectangular & batched operands on the square coded grid.
+
+The three-phase protocol evaluates one ``Y = AᵀB`` with square ``m×m``
+operands, ``s|m`` and ``t|m`` (paper §IV).  Real workloads are not square:
+the serving-time primitive the follow-up work targets is a rectangular
+``[r,k]×[k,c]`` projection (an lm_head is ``[1,D]×[D,V]``), often with
+leading batch dimensions.  This module maps such a product onto a grid of
+coded ``m×m`` block-matmuls:
+
+* **block size** — :func:`choose_block` picks the protocol side ``m``: a
+  multiple of ``lcm(s,t)`` doubled until the tile count fits a budget, so
+  tiny operands don't over-pad and large ones don't explode into thousands
+  of protocol dispatches.  Doubling keeps the set of distinct plan keys
+  (and therefore jit compiles) logarithmic in the workload sizes seen.
+* **tiling** — :func:`tile_blocks` zero-pads each operand up to the grid
+  and splits it into ``m×m`` tiles.  Padding is exact: field encoding maps
+  0 ↦ 0, so padded rows/columns contribute nothing to any block product.
+* **assembly** — ``Y[i,j] = Σ_l A[i,l] @ B[l,j] (mod p)``:
+  :func:`assemble` folds the per-block protocol outputs back into the
+  plaintext-shaped result (the inner sum stays in the field, one decode at
+  the end — fixed-point scale is unchanged by the sum).
+
+Everything here is geometry; the session layer (:mod:`repro.mpc.api`)
+owns field encode/decode and hands the blocks to a pluggable backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+# default cap on protocol dispatches per matmul: below it, smaller tiles
+# only add host-side dispatch; above it, padding waste dominates
+DEFAULT_TILE_BUDGET = 64
+
+
+def n_tiles(m: int, r: int, k: int, c: int) -> int:
+    """Block-product count for an ``[r,k]×[k,c]`` matmul at tile side m."""
+    return (-(-r // m)) * (-(-k // m)) * (-(-c // m))
+
+
+def padded_volume(m: int, r: int, k: int, c: int) -> int:
+    """Coded work proxy: the product of grid-padded dimensions."""
+    up = lambda d: (-(-d // m)) * m  # noqa: E731
+    return up(r) * up(k) * up(c)
+
+
+def choose_block(s: int, t: int, r: int, k: int, c: int,
+                 *, budget: int = DEFAULT_TILE_BUDGET) -> int:
+    """Tile side ``lcm(s,t)·2^j``: fit the dispatch budget, then coarsen.
+
+    Doubles from ``lcm(s,t)`` until the tile count fits ``budget`` (host
+    dispatch is the scarce resource), then keeps doubling while the padded
+    volume does not grow — so divisible shapes collapse to the fewest
+    dispatches (a square ``m×m`` call becomes ONE protocol block) while
+    ragged shapes keep their padding small.  Never grows past the largest
+    operand dimension, and never returns a side the protocol can't
+    partition.
+    """
+    if budget < 1:
+        raise ValueError(f"tile budget must be >= 1, got {budget}")
+    lcm = math.lcm(s, t)
+    m = lcm
+    big = max(r, k, c)
+    while m < big and n_tiles(m, r, k, c) > budget:
+        m *= 2
+    while m < big and (padded_volume(2 * m, r, k, c)
+                       <= padded_volume(m, r, k, c)):
+        m *= 2
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class TileMap:
+    """Grid geometry for one ``[r,k]×[k,c]`` product at tile side ``m``."""
+
+    m: int
+    r: int
+    k: int
+    c: int
+
+    @property
+    def gr(self) -> int:
+        return -(-self.r // self.m)
+
+    @property
+    def gk(self) -> int:
+        return -(-self.k // self.m)
+
+    @property
+    def gc(self) -> int:
+        return -(-self.c // self.m)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.gr * self.gk * self.gc
+
+    def block_index(self, i: int, j: int, l: int) -> int:
+        """Position of block product ``A[i,l]·B[l,j]`` in the op list."""
+        return (i * self.gc + j) * self.gk + l
+
+
+def tile_blocks(x, m: int):
+    """``[d0, d1] -> [g0, g1, m, m]``: zero-pad to the grid and split."""
+    d0, d1 = x.shape
+    g0, g1 = -(-d0 // m), -(-d1 // m)
+    xp = jnp.pad(x, ((0, g0 * m - d0), (0, g1 * m - d1)))
+    return xp.reshape(g0, m, g1, m).transpose(0, 2, 1, 3)
+
+
+def assemble(tm: TileMap, outs, p: int):
+    """Fold the ordered block outputs back into ``[r, c]`` (mod p).
+
+    ``outs``: one ``[m, m]`` field-domain array per block, ordered by
+    :meth:`TileMap.block_index`.  The inner ``Σ_l`` folds mod p (adding
+    block products never changes the fixed-point scale).
+    """
+    stack = jnp.stack(outs).reshape(tm.gr, tm.gc, tm.gk, tm.m, tm.m)
+    y = stack[:, :, 0]
+    for l in range(1, tm.gk):
+        y = (y + stack[:, :, l]) % p
+    full = y.transpose(0, 2, 1, 3).reshape(tm.gr * tm.m, tm.gc * tm.m)
+    return full[: tm.r, : tm.c]

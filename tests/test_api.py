@@ -1,0 +1,406 @@
+"""Unified MPCSpec/MPCSession API: spec validation, the rectangular/batched
+shape adapter (property sweeps over shapes × schemes × primes), backend
+agreement, and shim equivalence of the legacy entry points."""
+import jax
+import numpy as np
+import pytest
+
+from repro.mpc import AGECMPCProtocol, Field, MPCSpec, P_DEFAULT, P_MERSENNE31, connect
+from repro.mpc.api import MPCSession
+from repro.mpc.backends import BatchedBackend, LocalBackend, resolve_backend
+from repro.mpc.tiling import TileMap, choose_block, n_tiles, tile_blocks
+
+
+def exact_matmul(a, b, p):
+    return np.array((a.astype(object) @ b.astype(object)) % p, np.int64)
+
+
+# ================================================================== spec
+class TestSpec:
+    def test_validates(self):
+        with pytest.raises(ValueError, match="scheme"):
+            MPCSpec(s=2, t=2, z=2, scheme="nope")
+        with pytest.raises(ValueError, match="positive"):
+            MPCSpec(s=0, t=2, z=2)
+        with pytest.raises(ValueError, match=r"s\|m"):
+            MPCSpec(s=2, t=3, z=1, m=8)
+        with pytest.raises(TypeError, match="Field"):
+            MPCSpec(s=2, t=2, z=2, field=67108859)
+        with pytest.raises(ValueError, match="lam"):
+            MPCSpec(s=2, t=2, z=2, lam=-1)
+
+    def test_frozen_hashable_replace(self):
+        spec = MPCSpec(s=2, t=2, z=2)
+        with pytest.raises(dataclasses_err()):
+            spec.s = 3
+        assert hash(spec) == hash(MPCSpec(s=2, t=2, z=2))
+        spec2 = spec.replace(m=8)
+        assert spec2.m == 8 and spec.m is None
+
+    def test_plan_key_matches_protocol(self):
+        spec = MPCSpec(s=2, t=3, z=1, m=12, scheme="polydot")
+        proto = AGECMPCProtocol.from_spec(spec)
+        assert proto.plan_key == spec.plan_key()
+        assert proto.plan is spec.plan()          # same cached object
+        assert proto.spec == spec
+
+    def test_block_required(self):
+        spec = MPCSpec(s=2, t=2, z=2)
+        with pytest.raises(ValueError, match="block size"):
+            spec.plan_key()
+        assert spec.plan_key(8)[-1] == 8
+
+    def test_derived_counts(self):
+        spec = MPCSpec(s=2, t=2, z=2)
+        assert spec.n_workers == 17               # paper Example 1
+        assert spec.recovery_threshold == 6
+
+    def test_validate_survivors_matches_legacy(self):
+        spec = MPCSpec(s=2, t=2, z=2)
+        proto = spec.protocol(8)
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            mask = np.ones(spec.n_workers, bool)
+            mask[rng.choice(spec.n_workers, 5, replace=False)] = False
+            np.testing.assert_array_equal(
+                spec.validate_survivors(mask), proto._survivor_prefix(mask))
+        with pytest.raises(ValueError, match="shape"):
+            spec.validate_survivors(np.ones(3, bool))
+        with pytest.raises(RuntimeError, match="threshold"):
+            spec.validate_survivors(np.zeros(spec.n_workers, bool))
+
+
+def dataclasses_err():
+    import dataclasses
+
+    return dataclasses.FrozenInstanceError
+
+
+# ================================================================ tiling
+class TestTiling:
+    def test_choose_block_divisible_collapses(self):
+        # square divisible shapes take ONE protocol block
+        assert choose_block(2, 2, 8, 8, 8) == 8
+        assert choose_block(2, 2, 128, 128, 128) == 128
+
+    def test_choose_block_budget_and_partitioning(self):
+        for (s, t, r, k, c) in [(2, 3, 1, 100, 999), (3, 2, 7, 7, 7),
+                                (1, 2, 1, 13, 29), (2, 2, 640, 3, 2)]:
+            m = choose_block(s, t, r, k, c)
+            assert m % s == 0 and m % t == 0
+            assert n_tiles(m, r, k, c) <= 64
+
+    def test_tile_roundtrip(self):
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 100, (5, 7))
+        tiles = np.asarray(tile_blocks(x, 4))
+        assert tiles.shape == (2, 2, 4, 4)
+        rebuilt = tiles.transpose(0, 2, 1, 3).reshape(8, 8)
+        np.testing.assert_array_equal(rebuilt[:5, :7], x)
+        assert rebuilt[5:, :].sum() == 0 and rebuilt[:, 7:].sum() == 0
+
+    def test_tilemap_block_order(self):
+        tm = TileMap(m=4, r=5, k=9, c=6)
+        assert (tm.gr, tm.gk, tm.gc) == (2, 3, 2)
+        assert tm.n_blocks == 12
+        seen = {tm.block_index(i, j, l)
+                for i in range(tm.gr) for j in range(tm.gc)
+                for l in range(tm.gk)}
+        assert seen == set(range(12))
+
+
+# ====================================================== shape adapter sweep
+RECT_SHAPES = [(1, 10, 23), (5, 6, 7), (8, 8, 8), (3, 17, 2)]
+
+
+@pytest.mark.parametrize("r,k,c", RECT_SHAPES)
+def test_rectangular_exact_default_scheme(r, k, c):
+    """Adapter output == plaintext (a @ b) mod p, bit-exact, any shape."""
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)
+    rng = np.random.default_rng(r * 100 + c)
+    a = rng.integers(0, spec.field.p, (r, k))
+    b = rng.integers(0, spec.field.p, (k, c))
+    y = sess.matmul(a, b, encoded=True)
+    assert y.shape == (r, c)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_matmul(a, b, spec.field.p))
+
+
+@pytest.mark.parametrize("scheme", ["age", "entangled", "polydot"])
+@pytest.mark.parametrize("p", [P_DEFAULT, P_MERSENNE31])
+def test_rectangular_exact_schemes_and_primes(scheme, p):
+    spec = MPCSpec(s=2, t=2, z=2, scheme=scheme, field=Field(p))
+    sess = connect(spec)
+    rng = np.random.default_rng(hash((scheme, p)) % 2**31)
+    a = rng.integers(0, p, (4, 9))
+    b = rng.integers(0, p, (9, 6))
+    y = sess.matmul(a, b, encoded=True)
+    np.testing.assert_array_equal(np.asarray(y), exact_matmul(a, b, p))
+
+
+def test_batched_leading_dims():
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)
+    rng = np.random.default_rng(3)
+    # a batched, b shared: leading dims fold into rows (one tiled product)
+    a = rng.standard_normal((2, 3, 4, 5)).astype(np.float32)
+    b = rng.standard_normal((5, 6)).astype(np.float32)
+    y = np.asarray(sess.matmul(a, b))
+    assert y.shape == (2, 3, 4, 6)
+    np.testing.assert_allclose(y, a @ b, atol=0.05)
+    # both batched: broadcast over leading dims
+    a2 = rng.standard_normal((2, 4, 5)).astype(np.float32)
+    b2 = rng.standard_normal((2, 5, 3)).astype(np.float32)
+    y2 = np.asarray(sess.matmul(a2, b2))
+    assert y2.shape == (2, 4, 3)
+    np.testing.assert_allclose(y2, a2 @ b2, atol=0.05)
+
+
+def test_vector_operands():
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal(7).astype(np.float32)
+    b = rng.standard_normal((7, 3)).astype(np.float32)
+    y = np.asarray(sess.matmul(a, b))
+    assert y.shape == (3,)
+    np.testing.assert_allclose(y, a @ b, atol=0.05)
+    v = rng.standard_normal(3).astype(np.float32)
+    yv = np.asarray(sess.matmul(b, v))
+    assert yv.shape == (7,)
+    np.testing.assert_allclose(yv, b @ v, atol=0.05)
+
+
+def test_zero_size_operands():
+    """np.matmul semantics without protocol work: empty contraction sums
+    to zero, empty rows/cols give empty output (and never abort a flush)."""
+    sess = connect(MPCSpec(s=2, t=2, z=2))
+    y = np.asarray(sess.matmul(np.zeros((0, 4)), np.zeros((4, 3))))
+    assert y.shape == (0, 3)
+    y = np.asarray(sess.matmul(np.zeros((2, 0)), np.zeros((0, 3))))
+    np.testing.assert_array_equal(y, np.zeros((2, 3)))
+    ye = sess.matmul(np.zeros((2, 0), np.int64), np.zeros((0, 3), np.int64),
+                     encoded=True)
+    assert np.asarray(ye).dtype == np.int64 and np.asarray(ye).sum() == 0
+    rid = sess.submit(np.zeros((0, 4)), np.zeros((4, 3)))
+    assert sess.flush()[rid].shape == (0, 3)
+
+
+def test_shape_mismatch_raises():
+    sess = connect(MPCSpec(s=2, t=2, z=2))
+    with pytest.raises(ValueError, match="align"):
+        sess.matmul(np.ones((2, 3)), np.ones((4, 2)))
+
+
+def test_square_divisible_matches_fast_path_bitwise():
+    """On a divisible square shape with a pinned block, the adapter is ONE
+    protocol call consuming the caller's key — bit-identical to run()."""
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    sess = connect(spec)
+    proto = spec.protocol()
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, spec.field.p, (8, 8))
+    b = rng.integers(0, spec.field.p, (8, 8))
+    key = jax.random.PRNGKey(11)
+    y_sess = sess.matmul(a, b, encoded=True, key=key)
+    y_run = proto.run(a.T, b, key)              # run computes AᵀB
+    np.testing.assert_array_equal(np.asarray(y_sess), np.asarray(y_run))
+
+
+def test_survivor_mask_applies_to_every_block():
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)
+    rng = np.random.default_rng(6)
+    a = rng.integers(0, spec.field.p, (5, 9))
+    b = rng.integers(0, spec.field.p, (9, 4))
+    surv = np.ones(spec.n_workers, bool)
+    surv[rng.choice(spec.n_workers,
+                    spec.n_workers - spec.recovery_threshold,
+                    replace=False)] = False
+    y = sess.matmul(a, b, encoded=True, survivors=surv)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_matmul(a, b, spec.field.p))
+
+
+# ============================================================== backends
+def test_backends_bit_agree_rectangular_float():
+    """The acceptance shape: [1,D]x[D,V] floats, D/V not multiples of s·t,
+    identical (bit-for-bit) across local, batched and sharded backends."""
+    spec = MPCSpec(s=2, t=2, z=2)
+    rng = np.random.default_rng(7)
+    d, v = 13, 29                                 # not multiples of s·t = 4
+    a = rng.standard_normal((1, d)).astype(np.float32)
+    b = rng.standard_normal((d, v)).astype(np.float32)
+    key = jax.random.PRNGKey(21)
+    mesh = jax.make_mesh((1,), ("model",))
+    outs = {}
+    for name, opts in [("local", {}), ("batched", {}),
+                       ("sharded", {"mesh": mesh})]:
+        sess = connect(spec, backend=name, **opts)
+        y = np.asarray(sess.matmul(a, b, key=key))
+        assert y.shape == (1, v)
+        np.testing.assert_allclose(y, a @ b, atol=0.05)
+        outs[name] = y
+    np.testing.assert_array_equal(outs["local"], outs["batched"])
+    np.testing.assert_array_equal(outs["local"], outs["sharded"])
+
+
+def test_batched_backend_one_engine_flush():
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec, backend="batched")
+    rng = np.random.default_rng(8)
+    p = spec.field.p
+    wants = {}
+    for i in range(4):
+        a = rng.integers(0, p, (6, 5))
+        b = rng.integers(0, p, (5, 7))
+        rid = sess.submit(a, b, encoded=True)
+        wants[rid] = exact_matmul(a, b, p)
+    assert sess.pending() == 4
+    results = sess.flush()
+    assert sess.pending() == 0
+    engine = sess.backend.engine
+    assert engine.stats["batches"] >= 1           # one grouped dispatch set
+    for rid, want in wants.items():
+        np.testing.assert_array_equal(np.asarray(results[rid]), want)
+
+
+def test_flush_failure_isolation():
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)
+    rng = np.random.default_rng(9)
+    p = spec.field.p
+    good_a = rng.integers(0, p, (4, 4))
+    good_b = rng.integers(0, p, (4, 4))
+    bad_surv = np.zeros(spec.n_workers, bool)
+    bad_surv[: spec.recovery_threshold] = True
+    r1 = sess.submit(good_a, good_b, encoded=True)
+    # a request whose mask dies between submit and flush: emulate by
+    # failing workers so its (valid-at-submit) mask drops below threshold
+    r2 = sess.submit(good_a, good_b, encoded=True, survivors=bad_surv)
+    sess.fail([0, 1])                             # kills r2's quorum prefix
+    results = sess.flush()
+    assert r1 in results
+    np.testing.assert_array_equal(np.asarray(results[r1]),
+                                  exact_matmul(good_a, good_b, p))
+    assert r2 in sess.failures and "threshold" in sess.failures[r2]
+
+
+def test_session_fail_below_threshold_raises():
+    sess = connect(MPCSpec(s=2, t=2, z=2))
+    sess.fail(list(range(12)))                    # 5 alive < t²+z = 6
+    with pytest.raises(RuntimeError, match="threshold"):
+        sess.matmul(np.ones((4, 4)), np.ones((4, 4)), encoded=True)
+
+
+def test_batched_backend_attrition_replans():
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    sess = connect(spec, backend="batched", spares=3)
+    sess.fail(list(range(1, 14)))                 # 20-worker pool -> 7 alive
+    rng = np.random.default_rng(10)
+    p = spec.field.p
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    y = sess.matmul(a, b, encoded=True)
+    np.testing.assert_array_equal(np.asarray(y), exact_matmul(a, b, p))
+    assert sess.backend.engine.stats["replans"] >= 1
+
+
+def test_resolve_backend():
+    assert isinstance(resolve_backend("local"), LocalBackend)
+    be = BatchedBackend(max_batch=4)
+    assert resolve_backend(be) is be
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("quantum")
+    with pytest.raises(ValueError, match="ignored"):
+        resolve_backend(be, spares=3)
+
+
+def test_reference_mode_backend():
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec, backend="local", mode="reference")
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, spec.field.p, (3, 5))
+    b = rng.integers(0, spec.field.p, (5, 4))
+    y = sess.matmul(a, b, encoded=True)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_matmul(a, b, spec.field.p))
+
+
+# ================================================================= shims
+def test_secure_matmul_shim_equivalence():
+    """The legacy float facade == the historical encode/run/decode pipeline,
+    bit for bit (same key, same single protocol block)."""
+    from repro.mpc.secure_matmul import secure_matmul
+
+    rng = np.random.default_rng(12)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    proto = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    f = proto.field
+    legacy = np.asarray(f.decode(
+        proto.run(f.encode(a), f.encode(b), jax.random.PRNGKey(0)),
+        products=2)).astype(a.dtype)
+    shim = np.asarray(secure_matmul(a, b, s=2, t=2, z=2))
+    np.testing.assert_array_equal(shim, legacy)
+    # and the session spells it directly
+    sess = connect(MPCSpec(s=2, t=2, z=2, m=8))
+    direct = np.asarray(sess.matmul(a.T, b, key=jax.random.PRNGKey(0)))
+    np.testing.assert_array_equal(shim, direct.astype(a.dtype))
+
+
+def test_engine_spec_and_kwarg_paths_identical():
+    from repro.mpc.engine import MPCEngine
+
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    rng = np.random.default_rng(13)
+    p = spec.field.p
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    eng = MPCEngine()
+    r1 = eng.submit(a, b, key=jax.random.PRNGKey(0), spec=spec)
+    r2 = eng.submit(a, b, key=jax.random.PRNGKey(0), s=2, t=2, z=2, m=8)
+    res = eng.flush()
+    np.testing.assert_array_equal(np.asarray(res[r1]), np.asarray(res[r2]))
+    with pytest.raises(TypeError, match="spec"):
+        eng.submit(a, b, key=jax.random.PRNGKey(0), s=2, t=2)
+
+
+def test_engine_public_survivor_validation():
+    from repro.mpc.engine import MPCEngine
+
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    eng = MPCEngine()
+    bad = np.zeros(spec.n_workers, bool)
+    with pytest.raises(RuntimeError, match="threshold"):
+        eng.submit(np.ones((8, 8)), np.ones((8, 8)),
+                   key=jax.random.PRNGKey(0), spec=spec, survivors=bad)
+
+
+def test_elastic_pool_from_spec():
+    from repro.mpc.elastic import ElasticPool
+
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    pool = ElasticPool.from_spec(spec, spares=3)
+    assert pool.spec == spec
+    assert pool.pool_size == spec.n_workers + 3
+
+
+def test_session_key_discipline_multiblock():
+    """Multi-block calls must draw distinct per-block randomness (no two
+    blocks share phase-1/2 masks) yet stay deterministic per key."""
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec)
+    rng = np.random.default_rng(14)
+    a = rng.integers(0, spec.field.p, (4, 10))
+    b = rng.integers(0, spec.field.p, (10, 4))
+    k = jax.random.PRNGKey(5)
+    req = sess._build_request(a, b, key=k, survivors=None, encoded=True,
+                              m=None)
+    assert len(req.ops) > 1
+    keys = {tuple(np.asarray(op.key).tolist()) for op in req.ops}
+    assert len(keys) == len(req.ops)              # all distinct
+    y1 = sess.matmul(a, b, encoded=True, key=k)
+    y2 = sess.matmul(a, b, encoded=True, key=k)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
