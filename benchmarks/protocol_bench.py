@@ -138,6 +138,7 @@ def main():
                       f"req/s={bs / (us_batch / 1e6):.0f}")
 
     facade(records)
+    autotune_pairs(records)
     write_trajectory("PROTOCOL", records)
 
 
@@ -173,9 +174,60 @@ def facade(records):
                   f"overhead={overhead * 100:.1f}%")
 
 
+def autotune_pairs(records, *, quick: bool = False):
+    """Predicted-vs-measured overhead ordering for the autotuner
+    (DESIGN.md §7).
+
+    For one workload the tuner's top candidate is timed against the
+    *worst-ranked* feasible candidate on the same session path; the pair
+    lands as ``autotune_*`` (fused = tuned spec, baseline = worst spec)
+    with the predicted weighted-overhead ratio in the derived column, so
+    the trajectory records whether the Cor. 8–10 objective keeps ordering
+    real wall time.  A second pair times the search itself against the
+    per-call cost it amortizes (one plan build)."""
+    from repro.mpc import MPCSpec, connect
+    from repro.mpc.autotune import tune
+
+    rng = np.random.default_rng(11)
+    side = 32 if quick else 96
+    budget, z, shape = 24, 2, (side, side, side)
+    res = tune(budget, z, shape)
+    ranked = [c for c in res.candidates if not c.over_budget]
+    best_c, worst_c = ranked[0], ranked[-1]
+    iters, best_of = (3, 2) if quick else (5, 3)
+    times = {}
+    for label, cand in (("tuned", best_c), ("worst", worst_c)):
+        spec = MPCSpec(s=cand.s, t=cand.t, z=z, lam=cand.lam,
+                       scheme=cand.scheme, m=cand.m)
+        sess = connect(spec)
+        a = rng.standard_normal(shape[:2])
+        b = rng.standard_normal(shape[1:])
+        times[label] = time_us(sess.matmul, a, b, iters=iters,
+                               warmup=2, best_of=best_of)
+    predicted = worst_c.score / best_c.score
+    emit_pair(
+        records, f"autotune_rank_m{side}", times["tuned"], times["worst"],
+        f"predicted={predicted:.2f}x;tuned={best_c.scheme}:s{best_c.s}"
+        f"t{best_c.t}N{best_c.n_workers}m{best_c.m};worst={worst_c.scheme}:"
+        f"s{worst_c.s}t{worst_c.t}N{worst_c.n_workers}m{worst_c.m}")
+
+    # the search itself vs the plan build it sits in front of
+    us_tune = time_us(tune, budget, z, shape, iters=iters, warmup=1,
+                      best_of=best_of)
+    s0 = res.spec
+    us_plan = time_us(build_plan, s0.scheme, s0.s, s0.t, s0.z, s0.lam,
+                      s0.field, s0.m, iters=iters, warmup=1, best_of=best_of)
+    emit_pair(records, "autotune_search", us_tune, us_plan,
+              f"candidates={len(res.candidates)};vs-one-plan-build")
+
+
 def smoke():
-    """Fast correctness leg for CI (no timing, no JSON): fused + survivor +
-    batched-engine paths must produce exact products at reduced m."""
+    """Fast CI leg: fused + survivor + batched-engine + autotuned-session
+    paths must produce exact products at reduced m.  Quick-mode
+    ``autotune_*`` pairs (small sides, few iters — trend markers, not
+    calibration-grade timings) are the one thing it appends to
+    ``BENCH_PROTOCOL.json`` so predicted-vs-measured ordering is tracked
+    from CI too; everything else stays untimed."""
     from repro.mpc.engine import MPCEngine
 
     s, t, z, m = 2, 2, 2, 8
@@ -207,9 +259,29 @@ def smoke():
     want_r = np.array((ar.astype(object) @ br.astype(object))
                       % proto.field.p, np.int64)
     assert np.array_equal(np.asarray(yr), want_r)
+    # autotune: tune -> connect -> matmul round-trip must stay exact, and
+    # the quick autotune_* pairs land in BENCH_PROTOCOL.json so the
+    # predicted-vs-measured ordering is tracked from CI too
+    from repro.mpc.autotune import tune
+
+    res = tune(24, z, (6, 12, 5))
+    ts = connect(res.spec, tile_budget=res.tile_budget)
+    at = rng.integers(0, proto.field.p, (6, 12))
+    bt = rng.integers(0, proto.field.p, (12, 5))
+    yt = ts.matmul(at, bt, encoded=True)
+    want_t = np.array((at.astype(object) @ bt.astype(object))
+                      % proto.field.p, np.int64)
+    assert np.array_equal(np.asarray(yt), want_t)
+
+    auto_records = []
+    autotune_pairs(auto_records, quick=True)
+    write_trajectory("PROTOCOL", auto_records)
+
     print(f"protocol smoke OK: fused, survivor, engine batch of {len(rids)} "
           f"(stats {eng.stats}), session rect [3,10]x[10,5] "
-          f"in {sess.stats['blocks']} blocks")
+          f"in {sess.stats['blocks']} blocks, autotuned "
+          f"{res.spec.scheme} s={res.spec.s} t={res.spec.t} "
+          f"λ={res.spec.lam} N={res.spec.n_workers} m={res.spec.m}")
 
 
 if __name__ == "__main__":

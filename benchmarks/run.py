@@ -6,8 +6,10 @@
 Emits ``name,us_per_call,derived`` CSV (kernel/protocol benches) plus the
 paper-figure tables (fig2 / fig3a-c) and, when dry-run artifacts exist,
 the roofline table.  ``--smoke`` runs only the fast protocol correctness
-leg (fused, survivor-decode and batched-engine paths at reduced m) so CI
-catches regressions in the new paths without paying for the full sweep.
+leg (fused, survivor-decode, batched-engine and autotuned-session paths
+at reduced m, plus quick ``autotune_*`` pairs appended to
+``BENCH_PROTOCOL.json``) so CI catches regressions in the new paths
+without paying for the full sweep.
 """
 from __future__ import annotations
 

@@ -12,8 +12,14 @@ programs, survivor-table LRUs) are memoized process-wide in
 :mod:`repro.mpc.planner`; see DESIGN.md §2 and §5.  Batched request serving
 lives in :mod:`repro.mpc.engine`, elastic worker pools in
 :mod:`repro.mpc.elastic`.
+
+The paper's optimization layer is executable too (DESIGN.md §7):
+``MPCSpec.tune(N, z, shape)`` / :func:`repro.mpc.autotune.tune` search the
+generalized code family under the closed-form worker counts and rank by
+the weighted Cor. 8–10 overhead objective (:class:`CostModel`).
 """
 from .api import MPCSession, MPCSpec, connect
+from .autotune import CostModel, TuneResult, tune
 from .field import ACC_WINDOW, DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31, acc_window
 from .planner import (
     ProtocolPlan,
@@ -27,10 +33,13 @@ from .protocol import AGECMPCProtocol
 
 __all__ = [
     "ACC_WINDOW",
+    "CostModel",
     "DEFAULT_FIELD",
     "Field",
     "MPCSession",
     "MPCSpec",
+    "TuneResult",
+    "tune",
     "P_DEFAULT",
     "P_MERSENNE31",
     "acc_window",

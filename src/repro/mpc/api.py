@@ -42,7 +42,14 @@ import numpy as np
 
 from .field import DEFAULT_FIELD, Field
 from .planner import PlanKey, ProtocolPlan, _resolve_code, get_plan
-from .tiling import DEFAULT_TILE_BUDGET, TileMap, assemble, choose_block, tile_blocks
+from .tiling import (
+    DEFAULT_TILE_BUDGET,
+    TileMap,
+    assemble,
+    choose_block,
+    choose_block_cost,
+    tile_blocks,
+)
 
 SCHEMES = ("age", "entangled", "polydot")
 
@@ -125,6 +132,25 @@ class MPCSpec:
         return self.field.frac_bits
 
     # ----------------------------------------------------------- factories
+    @classmethod
+    def tune(cls, n_workers: int, z: int, shape, **kw) -> "MPCSpec":
+        """Autotuned spec for a worker budget + workload (DESIGN.md §7).
+
+        Solves the paper's optimization layer: search AGE over every
+        feasible ``(s, t, λ)`` (plus Entangled and PolyDot) under the
+        closed-form/enumerated worker counts, rank by the weighted
+        Cor. 8–10 overhead objective (``cost=CostModel(...)``), and
+        co-optimize the coded tile side ``m`` jointly with ``(s, t)``
+        against ``shape = (r, k, c)`` (+ ``batch``).  Returns the winning
+        frozen spec with its block side baked in —
+        ``connect(MPCSpec.tune(N, z, shape))`` is the one-liner.  Use
+        :func:`repro.mpc.autotune.tune` directly for the full ranked
+        candidate list and the tuned tile budget.
+        """
+        from .autotune import tune as _tune
+
+        return _tune(n_workers, z, shape, **kw).spec
+
     def plan(self, m: Optional[int] = None) -> ProtocolPlan:
         """The cached data-independent tables for this spec at block ``m``."""
         return get_plan(self.scheme, self.s, self.t, self.z, self.lam,
@@ -201,7 +227,17 @@ class MPCSession:
     """
 
     def __init__(self, spec: MPCSpec, backend, *, key=None,
-                 tile_budget: int = DEFAULT_TILE_BUDGET):
+                 tile_budget: int = DEFAULT_TILE_BUDGET, cost=None):
+        if not isinstance(spec, MPCSpec):
+            raise TypeError(f"spec must be an MPCSpec, got {spec!r}")
+        # fail fast at session construction, not at first matmul: a bad
+        # dispatch budget used to surface only inside choose_block once
+        # real traffic arrived
+        if (isinstance(tile_budget, bool)
+                or not isinstance(tile_budget, (int, np.integer))
+                or tile_budget < 1):
+            raise ValueError(
+                f"tile_budget must be a positive int, got {tile_budget!r}")
         self.spec = spec
         self.backend = backend
         self._root_key = (jax.random.PRNGKey(0) if key is None
@@ -210,7 +246,10 @@ class MPCSession:
         self._dead: set = set()
         self._pending: List[_Request] = []
         self._next_rid = 0
-        self._tile_budget = tile_budget
+        self._tile_budget = int(tile_budget)
+        # optional CostModel: block sides come from the cost-model-aware
+        # search instead of the fixed-(s,t) doubling rule (DESIGN.md §7)
+        self._cost = cost
         self.failures: Dict[int, str] = {}
         self.stats = {"matmuls": 0, "blocks": 0, "flushes": 0}
 
@@ -377,6 +416,11 @@ class MPCSession:
             block = self.spec.replace(m=int(m)).m
         elif self.spec.m:
             block = self.spec.m
+        elif self._cost is not None:
+            block = choose_block_cost(
+                self.spec.s, self.spec.t, self.spec.z, self.spec.n_workers,
+                r, kdim, c, cost=self._cost, batch=len(pieces),
+                budget=self._tile_budget)
         else:
             block = choose_block(self.spec.s, self.spec.t, r, kdim, c,
                                  budget=self._tile_budget)
@@ -446,15 +490,33 @@ class MPCSession:
 def connect(spec: MPCSpec, backend: str = "local", **opts) -> MPCSession:
     """Open an :class:`MPCSession` over one of the pluggable backends.
 
-    ``backend``: ``"local"`` (default; ``mode="fused"|"pallas"|"reference"``),
-    ``"sharded"`` (requires ``mesh=``, optional ``axis``, ``wire_dtype``,
-    ``prg_masks``) or ``"batched"`` (optional ``spares``, ``max_batch``) —
-    or an already-constructed backend instance.  Session-level options:
-    ``key`` (base PRNG key) and ``tile_budget`` (shape-adapter dispatch cap).
+    ``spec`` is an :class:`MPCSpec` — hand-built or autotuned
+    (``connect(MPCSpec.tune(N, z, shape))``).  ``backend``: ``"local"``
+    (default; ``mode="fused"|"pallas"|"reference"``), ``"sharded"``
+    (requires ``mesh=``, optional ``axis``, ``wire_dtype``, ``prg_masks``)
+    or ``"batched"`` (optional ``spares``, ``max_batch``) — or an
+    already-constructed backend instance.  Session-level options: ``key``
+    (base PRNG key), ``tile_budget`` (shape-adapter dispatch cap, validated
+    here so misconfiguration fails at connect time) and ``cost`` (a
+    :class:`repro.mpc.autotune.CostModel`; block sides then come from the
+    cost-model-aware search, and the batched backend's engine re-tunes
+    under the same weights on attrition).  With ``cost`` set the budget
+    caps the *whole* workload's dispatches — batch × tiles, warning on
+    clamp — whereas the default path caps per-piece tiles only
+    (:func:`repro.mpc.tiling.choose_block_cost`).
     """
     from .backends import resolve_backend
 
     key = opts.pop("key", None)
     tile_budget = opts.pop("tile_budget", DEFAULT_TILE_BUDGET)
+    cost = opts.pop("cost", None)
+    if cost is not None and backend == "batched":
+        # the engine re-tunes under the same objective it serves with
+        opts.setdefault("cost", cost)
     be = resolve_backend(backend, **opts)
-    return MPCSession(spec, be, key=key, tile_budget=tile_budget)
+    engine = getattr(be, "engine", None)
+    if cost is not None and engine is not None and engine.cost is None:
+        # a pre-constructed batched backend: align its re-tune objective
+        # with the session's, unless the engine was built with its own
+        engine.cost = cost
+    return MPCSession(spec, be, key=key, tile_budget=tile_budget, cost=cost)

@@ -1,0 +1,360 @@
+"""Autotuned spec selection from the paper's cost model (DESIGN.md §7).
+
+The paper's central claim is that AGE codes *optimize* polynomial degrees
+for MPC: Theorem 3 gives the worker count of every gap λ, and Corollaries
+8–10 give the per-worker computation / storage / communication overheads
+any ``(s, t)`` partition pays at its worker count.  The repo has carried
+both layers since the seed (:mod:`repro.core.worker_counts`,
+:mod:`repro.core.overheads`) — but the runtime :class:`~repro.mpc.api
+.MPCSpec` still made the *caller* hand-pick ``(scheme, s, t, λ)``.  This
+module is the bridge:
+
+* :class:`CostModel` — the weighted Cor. 8–10 objective.  Weights are per
+  *scalar* (the paper's Fig. 3 unit): ``computation`` multiplies ξ (scalar
+  mults per worker, eq. (15)), ``storage`` multiplies σ (scalars stored
+  per worker, eq. (16)), ``communication`` multiplies ζ (scalars
+  exchanged, eq. (17)); ``dispatch`` is a per-protocol-block host cost for
+  tiled workloads (the serving-side term the paper does not model).
+* :func:`tune` — given a worker budget ``N``, privacy bound ``z`` and a
+  workload shape ``[r,k]×[k,c]`` (+ batch), enumerate the generalized code
+  family — AGE over every feasible ``(s, t, λ)``, Entangled (λ=0) and
+  PolyDot — keep candidates whose required worker count fits the budget,
+  co-optimize the coded tile side ``m`` *jointly* with ``(s, t)`` (the
+  fixed-``(s,t)`` search of :func:`repro.mpc.tiling.choose_block` becomes
+  :func:`repro.mpc.tiling.choose_block_cost` inside the candidate loop),
+  and rank by the weighted total overhead.  Returns a :class:`TuneResult`
+  whose ``spec`` is a frozen, validated :class:`~repro.mpc.api.MPCSpec`
+  with the winning block side baked in.
+* :func:`retune_spec` — the attrition-time variant: the block side ``m``
+  is already fixed (shares were tiled for it), the worker budget is the
+  *surviving* pool, and the search runs over the divisors of ``m``.  The
+  elastic layer (:meth:`repro.mpc.elastic.ElasticPool.retune`) and the
+  batched engine's escalation path resolve through it before falling back
+  to the legacy greedy ``replan``.
+
+Candidate worker counts come from the memoized degree-set enumeration
+(:func:`repro.mpc.planner._resolve_code` — always correct by
+construction); ``tests/test_autotune.py`` proves the tuner agrees with
+the closed forms of :mod:`repro.core.worker_counts` on the Theorem-3
+validation grid.  Every overhead term of eq. (15)–(17) is strictly
+increasing in ``N`` at fixed ``(m, s, t, z)``, so for one partition the
+tuner always lands on ``min_λ Γ(λ)`` — eq. (13) — whatever the weights;
+across partitions the weights arbitrate the paper's s/t trade-off
+(Fig. 2/3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from ..core.overheads import Overheads, overheads
+from .field import DEFAULT_FIELD, Field
+from .planner import _resolve_code
+from .tiling import DEFAULT_TILE_BUDGET, _check_budget, best_block
+
+#: partition sides searched per axis when (s, t) are free; worker counts
+#: grow ~ st² so the budget prunes far earlier in practice
+MAX_PARTITION = 8
+
+_SCHEME_RANK = {"age": 0, "entangled": 1, "polydot": 2}
+
+
+# ============================================================== cost model
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Weights for the Cor. 8–10 objective (per scalar; Fig. 3 units).
+
+    ``computation``  — weight on ξ, scalar multiplications per worker
+                       (eq. (15): ``m³/(st²) + m² + N(t²+z−1)m²/t²``);
+    ``storage``      — weight on σ, scalars stored per worker
+                       (eq. (16): ``(2N+z+1)m²/t² + 2m²/(st) + t²``);
+    ``communication``— weight on ζ, scalars exchanged among workers
+                       (eq. (17): ``N(N−1)m²/t²``);
+    ``dispatch``     — host-side cost per protocol block, the serving-side
+                       term tiled workloads add on top of the paper's
+                       per-block model (0 ⇒ pure paper objective).
+
+    All weights must be ≥ 0.  Every per-block term is strictly increasing
+    in ``N`` at fixed ``(m, s, t, z)``, so the ranking degenerates to
+    fewest-workers when all weights are equal *within* one partition —
+    the weights arbitrate *across* partitions.
+    """
+
+    computation: float = 1.0
+    storage: float = 1.0
+    communication: float = 1.0
+    dispatch: float = 0.0
+
+    def __post_init__(self):
+        for name in ("computation", "storage", "communication", "dispatch"):
+            v = getattr(self, name)
+            if not (isinstance(v, (int, float)) and v >= 0):
+                raise ValueError(f"{name} weight must be >= 0, got {v!r}")
+
+    def block(self, m: int, s: int, t: int, z: int, n: int) -> float:
+        """Weighted per-block overhead of one coded ``m×m`` product."""
+        ov = overheads(m, s, t, z, n)
+        return (self.computation * ov.computation
+                + self.storage * ov.storage
+                + self.communication * ov.communication)
+
+    def total(self, m: int, s: int, t: int, z: int, n: int,
+              blocks: int) -> float:
+        """Workload objective: ``blocks`` coded products + dispatch cost."""
+        return blocks * (self.block(m, s, t, z, n) + self.dispatch)
+
+
+DEFAULT_COST = CostModel()
+
+
+# =============================================================== candidates
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One ranked point of the tuner's search space."""
+
+    scheme: str
+    s: int
+    t: int
+    lam: Optional[int]          # explicit gap for AGE; None otherwise
+    n_workers: int
+    m: int                      # co-optimized coded tile side
+    n_blocks: int               # batch × tiles at that side
+    over_budget: bool           # True when even the coarsest side exceeds
+                                # the dispatch budget (documented clamp)
+    overheads: Overheads        # per coded block, at this candidate's N
+    score: float                # CostModel.total over the whole workload
+
+    def sort_key(self) -> Tuple:
+        """Deterministic ranking: budget-respecting first, then weighted
+        score, then fewest workers; ties break toward AGE and the largest
+        gap (the paper's Example 1 convention)."""
+        lam = -1 if self.lam is None else self.lam
+        return (self.over_budget, self.score, self.n_workers,
+                _SCHEME_RANK[self.scheme], self.t, self.s, -lam)
+
+
+def _shape3(shape) -> Tuple[int, int, int]:
+    """Normalize ``(r, k, c)`` or ``((r, k), (k, c))`` to ``(r, k, c)``."""
+    shape = tuple(shape)
+    if len(shape) == 2 and all(hasattr(d, "__len__") for d in shape):
+        (r, k1), (k2, c) = shape
+        if k1 != k2:
+            raise ValueError(f"inner dims disagree: {shape}")
+        shape = (r, k1, c)
+    if len(shape) != 3:
+        raise ValueError(
+            f"shape must be (r, k, c) or ((r, k), (k, c)), got {shape!r}")
+    r, k, c = (int(d) for d in shape)
+    if min(r, k, c) < 1:
+        raise ValueError(f"workload dims must be >= 1, got {shape!r}")
+    return r, k, c
+
+
+def _lam_choices(scheme: str, t: int, z: int,
+                 lam: Optional[int]) -> Sequence[Optional[int]]:
+    if scheme != "age":
+        return (None,)           # entangled/polydot ignore the gap
+    if lam is not None:
+        return (lam,)
+    if t == 1:
+        return (0,)              # N = 2s + 2z − 1 for every gap (Lemma 14)
+    return tuple(range(z + 1))   # eq. (13): search the full gap range
+
+
+def _axis_range(pinned: Optional[int], limit: int) -> Sequence[int]:
+    return (pinned,) if pinned is not None else range(1, limit + 1)
+
+
+def _feasible(n_workers: int, z: int, schemes: Sequence[str],
+              t_axis: Sequence[int], s_axis: Sequence[int],
+              lam: Optional[int]):
+    """Yield every feasible family member ``(scheme, s, t, λ, N)``.
+
+    The one enumeration path shared by :func:`search` and
+    :func:`retune_spec` (only the partition axes differ: free/pinned
+    ranges vs divisors of the in-flight block side): excludes the uncoded
+    ``s = t = 1`` BGW case, prunes ``st > N`` before touching the code
+    (``|P(H)| ⊇ P(C_A)+P(C_B)`` has at least ``st`` elements, so such a
+    code can never fit), sizes the rest by the memoized degree-set
+    enumeration, and keeps those within the worker budget.
+    """
+    for scheme in schemes:
+        if scheme not in _SCHEME_RANK:
+            raise ValueError(
+                f"unknown scheme {scheme!r}: expected one of "
+                f"{sorted(_SCHEME_RANK)}")
+        for tt in t_axis:
+            for ss in s_axis:
+                if ss == 1 and tt == 1:
+                    continue
+                if ss * tt > n_workers:
+                    continue
+                for lm in _lam_choices(scheme, tt, z, lam):
+                    n = _resolve_code(scheme, ss, tt, z, lm).n_workers
+                    if n <= n_workers:
+                        yield scheme, ss, tt, lm, n
+
+
+def search(n_workers: int, z: int, shape, *, batch: int = 1,
+           cost: Optional[CostModel] = None,
+           schemes: Sequence[str] = ("age", "entangled", "polydot"),
+           s: Optional[int] = None, t: Optional[int] = None,
+           lam: Optional[int] = None,
+           tile_budget: int = DEFAULT_TILE_BUDGET,
+           max_partition: int = MAX_PARTITION) -> Tuple[Candidate, ...]:
+    """Enumerate + rank every feasible candidate (best first).
+
+    Feasibility: the code's required worker count (degree-set enumeration,
+    memoized) fits the ``n_workers`` budget; ``s = t = 1`` is excluded
+    (uncoded BGW, paper footnote 1).  For each feasible ``(scheme, s, t,
+    λ)`` the coded tile side is co-optimized against the workload shape
+    through :func:`repro.mpc.tiling.block_candidates`.
+    """
+    if n_workers < 1:
+        raise ValueError(f"worker budget must be >= 1, got {n_workers}")
+    if z < 1:
+        raise ValueError(f"privacy bound z must be >= 1, got {z}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    cm = DEFAULT_COST if cost is None else cost
+    r, k, c = _shape3(shape)
+    out = []
+    for scheme, ss, tt, lm, n in _feasible(
+            n_workers, z, schemes, _axis_range(t, max_partition),
+            _axis_range(s, max_partition), lam):
+        m, blocks, over, sc = best_block(
+            ss, tt, z, n, r, k, c, cost=cm, batch=batch,
+            budget=tile_budget)
+        out.append(Candidate(
+            scheme=scheme, s=ss, t=tt, lam=lm, n_workers=n,
+            m=m, n_blocks=blocks, over_budget=over,
+            overheads=overheads(m, ss, tt, z, n), score=sc))
+    out.sort(key=Candidate.sort_key)
+    return tuple(out)
+
+
+# ================================================================= results
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """The tuner's answer: a frozen spec + the ranked search space."""
+
+    spec: "object"                      # MPCSpec (the winning candidate)
+    tile_budget: int
+    shape: Tuple[int, int, int]
+    batch: int
+    cost: CostModel
+    candidates: Tuple[Candidate, ...]   # ranked, best first
+
+    @property
+    def best(self) -> Candidate:
+        return self.candidates[0]
+
+    @property
+    def predicted(self) -> Overheads:
+        """Per-block Cor. 8–10 overheads of the winning candidate."""
+        return self.best.overheads
+
+    def connect(self, backend: str = "local", **opts):
+        """``connect(result.spec)`` with the tuned tile budget and cost
+        model pre-wired into the session."""
+        from .api import connect
+
+        opts.setdefault("tile_budget", self.tile_budget)
+        opts.setdefault("cost", self.cost)
+        return connect(self.spec, backend, **opts)
+
+
+def tune(n_workers: int, z: int, shape, *, batch: int = 1,
+         cost: Optional[CostModel] = None,
+         schemes: Sequence[str] = ("age", "entangled", "polydot"),
+         s: Optional[int] = None, t: Optional[int] = None,
+         lam: Optional[int] = None, field: Field = DEFAULT_FIELD,
+         tile_budget: int = DEFAULT_TILE_BUDGET,
+         max_partition: int = MAX_PARTITION) -> TuneResult:
+    """Solve the paper's optimization layer for one workload.
+
+    Parameters
+    ----------
+    n_workers : the worker budget N (available edge devices)
+    z         : collusion/privacy bound
+    shape     : ``(r, k, c)`` or ``((r, k), (k, c))`` — the workload
+                ``[r,k]×[k,c]``
+    batch     : leading batch depth (multiplies the block count)
+    cost      : :class:`CostModel` weights (default: equal weights, no
+                dispatch term — the pure Fig. 3 objective)
+    schemes   : code families to search
+    s, t, lam : pin any of the partition / gap axes (e.g. validation
+                against the Theorem-3 grid pins ``s`` and ``t``)
+    field     : prime field + fixed-point config for the returned spec
+    tile_budget : dispatch cap forwarded to block co-optimization and to
+                sessions opened via :meth:`TuneResult.connect`
+
+    Raises ``ValueError`` when no candidate fits the budget (the family
+    minimum exceeds ``n_workers``).
+    """
+    from .api import MPCSpec
+
+    if tile_budget < 1:
+        raise ValueError(f"tile budget must be >= 1, got {tile_budget}")
+    cands = search(n_workers, z, shape, batch=batch, cost=cost,
+                   schemes=schemes, s=s, t=t, lam=lam,
+                   tile_budget=tile_budget, max_partition=max_partition)
+    if not cands:
+        raise ValueError(
+            f"no feasible spec: worker budget N={n_workers} is below the "
+            f"family minimum for z={z} (schemes={tuple(schemes)})")
+    best = cands[0]
+    spec = MPCSpec(s=best.s, t=best.t, z=z, lam=best.lam,
+                   scheme=best.scheme, field=field, m=best.m)
+    r, k, c = _shape3(shape)
+    # the winner's m is baked into the spec and bypasses the session's
+    # block search, so the documented over-budget clamp must warn HERE —
+    # same TileBudgetWarning contract as choose_block_cost
+    _check_budget(best.m, best.n_blocks, tile_budget, (r, k, c), batch)
+    return TuneResult(spec=spec, tile_budget=tile_budget, shape=(r, k, c),
+                      batch=batch, cost=cost or DEFAULT_COST,
+                      candidates=cands)
+
+
+# ============================================================ attrition path
+def retune_spec(n_workers: int, z: int, *, m: int,
+                field: Field = DEFAULT_FIELD,
+                cost: Optional[CostModel] = None,
+                schemes: Sequence[str] = ("age",),
+                max_partition: Optional[int] = None):
+    """Best spec decodable with ``n_workers`` survivors at a *fixed* block
+    side ``m`` (shares were already tiled for it), or ``None``.
+
+    The attrition-time tune: candidates are restricted to partitions that
+    divide ``m`` (the protocol cannot re-tile in-flight data), the worker
+    budget is the surviving pool, and ranking is the same weighted Cor.
+    8–10 objective on the single fixed block.  The elastic layer tries
+    this *before* the legacy greedy ``replan`` (DESIGN.md §7).
+
+    ``max_partition`` defaults to the same :data:`MAX_PARTITION` bound
+    :func:`tune` searches under — this sits on the serving path, and
+    enumerating degree sets for every large divisor of ``m`` would stall
+    a flush (``N ≥ st`` anyway, so partitions past a shrunken pool's size
+    can never fit).  Pass it explicitly to widen the search offline.
+    """
+    from .api import MPCSpec
+
+    cm = DEFAULT_COST if cost is None else cost
+    limit = min(m, MAX_PARTITION if max_partition is None else max_partition)
+    divisors = [d for d in range(1, limit + 1) if m % d == 0]
+    best: Optional[Tuple[Tuple, Candidate]] = None
+    for scheme, ss, tt, lm, n in _feasible(n_workers, z, schemes,
+                                           divisors, divisors, None):
+        cand = Candidate(
+            scheme=scheme, s=ss, t=tt, lam=lm, n_workers=n,
+            m=m, n_blocks=1, over_budget=False,
+            overheads=overheads(m, ss, tt, z, n),
+            score=cm.total(m, ss, tt, z, n, 1))
+        key = cand.sort_key()
+        if best is None or key < best[0]:
+            best = (key, cand)
+    if best is None:
+        return None
+    c = best[1]
+    return MPCSpec(s=c.s, t=c.t, z=z, lam=c.lam, scheme=c.scheme,
+                   field=field, m=m)

@@ -113,11 +113,12 @@ class BatchedBackend(MPCBackend):
     name = "batched"
     handles_attrition = True
 
-    def __init__(self, *, spares: int = 2, max_batch: int = 64, engine=None):
+    def __init__(self, *, spares: int = 2, max_batch: int = 64, engine=None,
+                 cost=None):
         from .engine import MPCEngine
 
         self.engine = engine if engine is not None else MPCEngine(
-            spares=spares, max_batch=max_batch)
+            spares=spares, max_batch=max_batch, cost=cost)
         self._dead: frozenset = frozenset()
 
     def fail(self, dead: frozenset) -> None:

@@ -107,6 +107,26 @@ class ElasticPool:
         """Failures absorbable after the exchange with zero recomputation."""
         return self.proto.n_workers - self.proto.recovery_threshold
 
+    # -------------------------------------------------------------- re-tune
+    def retune(self, cost=None) -> Optional[AGECMPCProtocol]:
+        """Pool shrank below N: re-solve the paper's optimization layer for
+        the best spec decodable with the *surviving* workers (DESIGN.md §7).
+
+        Unlike the greedy :meth:`replan` (max ``st²`` under feasibility),
+        this ranks every partition dividing the in-flight block side ``m``
+        — including the gap λ for AGE — by the weighted Cor. 8–10
+        objective (``cost``: a :class:`repro.mpc.autotune.CostModel`,
+        default weights when ``None``).  The engine escalation order is
+        re-tune first, greedy replan as fallback.  Returns the new
+        protocol, or ``None`` when nothing fits the survivors.
+        """
+        from .autotune import retune_spec
+
+        spec = retune_spec(int(self.alive.sum()), self.z, m=self.m,
+                           field=self.field, cost=cost,
+                           schemes=(self.scheme,))
+        return None if spec is None else AGECMPCProtocol.from_spec(spec)
+
     # -------------------------------------------------------------- re-plan
     def replan(self) -> Optional[AGECMPCProtocol]:
         """Pool shrank below N: find the largest-throughput (s', t') whose

@@ -90,17 +90,21 @@ def _pad_pow2(n: int, cap: int) -> int:
 class MPCEngine:
     """Batched MPC request engine: queue, group, vmap, decode, escalate."""
 
-    def __init__(self, *, spares: int = 2, max_batch: int = 64):
+    def __init__(self, *, spares: int = 2, max_batch: int = 64, cost=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.spares = spares
         self.max_batch = max_batch
+        # CostModel for attrition-time re-tuning (None: default weights);
+        # stats["replans"] counts every escalation, stats["retunes"] the
+        # subset won by the cost-model search (DESIGN.md §7)
+        self.cost = cost
         self._queue: List[MPCRequest] = []
         self._pools: Dict[PlanKey, ElasticPool] = {}
         self._replans: Dict[PlanKey, AGECMPCProtocol] = {}
         self._next_rid = 0
-        self.stats = {"batches": 0, "replans": 0, "masks_dropped": 0,
-                      "failed": 0}
+        self.stats = {"batches": 0, "replans": 0, "retunes": 0,
+                      "masks_dropped": 0, "failed": 0}
         self.failures: Dict[int, str] = {}
 
     # ------------------------------------------------------------- pools
@@ -158,9 +162,16 @@ class MPCEngine:
     # ------------------------------------------------------------- flush
     def _serving_proto(self, key: PlanKey, proto: AGECMPCProtocol
                        ) -> AGECMPCProtocol:
-        """Resolve the protocol a group is served under, escalating through
-        ``pool.replan()`` (memoized) while the backing pool is below N."""
-        for _ in range(len(self._pools) + 2):  # replan chains are short
+        """Resolve the protocol a group is served under, escalating
+        (memoized) while the backing pool is below N.
+
+        Escalation order (DESIGN.md §7): **re-tune before re-plan** — first
+        re-solve the paper's optimization layer for the best spec decodable
+        with the surviving workers (:meth:`ElasticPool.retune`, weighted
+        Cor. 8–10 objective under :attr:`cost`), and only if no tuned
+        candidate fits fall back to the legacy greedy ``pool.replan()``.
+        """
+        for _ in range(len(self._pools) + 2):  # escalation chains are short
             replanned = self._replans.get(key)
             if replanned is not None:
                 key, proto = replanned.plan_key, replanned
@@ -168,7 +179,11 @@ class MPCEngine:
             pool = self._pools.get(key)
             if pool is None or pool.alive.sum() >= proto.n_workers:
                 return proto
-            new = pool.replan()
+            new = pool.retune(self.cost)
+            if new is not None:
+                self.stats["retunes"] += 1
+            else:
+                new = pool.replan()
             if new is None:
                 raise RuntimeError(
                     f"pool for {key} infeasible ({int(pool.alive.sum())} "

@@ -27,12 +27,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
+from typing import Iterator, Tuple
 
 import jax.numpy as jnp
 
 # default cap on protocol dispatches per matmul: below it, smaller tiles
 # only add host-side dispatch; above it, padding waste dominates
 DEFAULT_TILE_BUDGET = 64
+
+
+class TileBudgetWarning(RuntimeWarning):
+    """The dispatch budget is infeasible even at the coarsest block side.
+
+    The adapter clamps to the fewest-dispatches side instead of failing —
+    the documented over-budget fallback — and warns so misconfigured
+    budgets (tiny budget × large batch) surface instead of silently
+    over-dispatching."""
 
 
 def n_tiles(m: int, r: int, k: int, c: int) -> int:
@@ -55,8 +66,14 @@ def choose_block(s: int, t: int, r: int, k: int, c: int,
     volume does not grow — so divisible shapes collapse to the fewest
     dispatches (a square ``m×m`` call becomes ONE protocol block) while
     ragged shapes keep their padding small.  Never grows past the largest
-    operand dimension, and never returns a side the protocol can't
-    partition.
+    operand dimension (``lcm(s,t)`` itself may exceed it — the protocol
+    can't partition anything smaller, so one padded block is returned),
+    and never returns a side the protocol can't partition.
+
+    Over-budget fallback (explicit, not silent): when even the coarsest
+    side the search reaches still exceeds ``budget``, the coarsest side is
+    returned as a documented clamp and a :class:`TileBudgetWarning` is
+    emitted.
     """
     if budget < 1:
         raise ValueError(f"tile budget must be >= 1, got {budget}")
@@ -68,6 +85,99 @@ def choose_block(s: int, t: int, r: int, k: int, c: int,
     while m < big and (padded_volume(2 * m, r, k, c)
                        <= padded_volume(m, r, k, c)):
         m *= 2
+    _check_budget(m, n_tiles(m, r, k, c), budget, (r, k, c))
+    return m
+
+
+def _check_budget(m: int, blocks: int, budget: int, shape,
+                  batch: int = 1) -> None:
+    if blocks > budget:
+        what = (f"{blocks} protocol dispatches" if batch == 1 else
+                f"{blocks} protocol dispatches (batch {batch} × "
+                f"{blocks // batch} tiles)")
+        warnings.warn(
+            f"tile budget {budget} infeasible for shape {shape}: clamping "
+            f"to block side {m} with {what}",
+            TileBudgetWarning, stacklevel=3)
+
+
+def block_candidates(s: int, t: int, r: int, k: int, c: int, *,
+                     batch: int = 1,
+                     budget: int = DEFAULT_TILE_BUDGET
+                     ) -> Iterator[Tuple[int, int, bool]]:
+    """Yield every candidate tile side with its workload dispatch count.
+
+    Sides are ``lcm(s,t)·2^j`` up to (and including) the first side
+    covering the largest operand dimension — the same logarithmic family
+    :func:`choose_block` walks.  Yields ``(m, blocks, over_budget)`` where
+    ``blocks = batch × n_tiles`` is the protocol dispatch count for the
+    whole (possibly batched) workload.  The cost-model searches
+    (:func:`choose_block_cost`, :mod:`repro.mpc.autotune`) rank these
+    candidates instead of hard-coding the fixed-``(s,t)`` doubling rule.
+    """
+    if budget < 1:
+        raise ValueError(f"tile budget must be >= 1, got {budget}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    m = math.lcm(s, t)
+    big = max(r, k, c)
+    while True:
+        blocks = batch * n_tiles(m, r, k, c)
+        yield m, blocks, blocks > budget
+        if m >= big:
+            return
+        m *= 2
+
+
+def best_block(s: int, t: int, z: int, n_workers: int,
+               r: int, k: int, c: int, *, cost, batch: int = 1,
+               budget: int = DEFAULT_TILE_BUDGET
+               ) -> Tuple[int, int, bool, float]:
+    """The best-ranked ``(m, blocks, over_budget, score)`` of
+    :func:`block_candidates` under one cost model.
+
+    The single ranking rule shared by :func:`choose_block_cost` and the
+    autotuner's joint ``(s, t, m)`` search (:mod:`repro.mpc.autotune`) —
+    budget-respecting candidates first, then (for over-budget ones) the
+    fewest dispatches, then the lowest weighted Cor. 8–10 score
+    ``cost.total(m, s, t, z, N, blocks)``, then the coarser side.  One
+    helper so a tuned spec's baked-in ``m`` and a ``cost=`` session's
+    block choice can never drift apart.
+    """
+    best = None
+    for m, blocks, over in block_candidates(s, t, r, k, c, batch=batch,
+                                            budget=budget):
+        sc = cost.total(m, s, t, z, n_workers, blocks)
+        key = (over, blocks if over else 0, sc, -m)
+        if best is None or key < best[0]:
+            best = (key, (m, blocks, over, sc))
+    return best[1]
+
+
+def choose_block_cost(s: int, t: int, z: int, n_workers: int,
+                      r: int, k: int, c: int, *, cost, batch: int = 1,
+                      budget: int = DEFAULT_TILE_BUDGET) -> int:
+    """Cost-model-aware :func:`choose_block` (DESIGN.md §7).
+
+    Picks the :func:`best_block` side; when no side fits the budget the
+    fewest-dispatch side wins and :class:`TileBudgetWarning` is emitted
+    (same documented clamp as :func:`choose_block`).
+
+    Budget semantics are *stricter* here than on the default path:
+    ``budget`` caps the whole workload's dispatch count (``batch ×
+    n_tiles``), whereas :func:`choose_block` — which never sees the batch
+    — caps the per-piece tile count only.  A batched call that fits
+    per-piece but not in total therefore coarsens (and, at the coarsest
+    side, warns) under a cost model where the default path would silently
+    dispatch ``batch × budget`` blocks.
+
+    ``cost`` is any object with the :class:`repro.mpc.autotune.CostModel`
+    interface (``total(m, s, t, z, n, blocks)``); taking it as a duck-typed
+    argument keeps this module free of an autotune import cycle.
+    """
+    m, blocks, _, _ = best_block(s, t, z, n_workers, r, k, c, cost=cost,
+                                 batch=batch, budget=budget)
+    _check_budget(m, blocks, budget, (r, k, c), batch)
     return m
 
 

@@ -19,9 +19,6 @@ from ..models.layers import KVCache
 
 def _pad_cache(cache, extra: int):
     """Grow KV caches along the sequence dim by ``extra`` slots."""
-    def pad(x, path=""):
-        return x
-
     def walk(obj):
         if isinstance(obj, KVCache):
             padw = [(0, 0)] * obj.k.ndim
@@ -51,8 +48,14 @@ class Engine:
     def generate(self, prompt: jax.Array, max_new: int,
                  embeds: Optional[jax.Array] = None) -> jax.Array:
         """prompt: [B, T] int32 → [B, max_new] greedy continuation."""
+        if max_new < 1:  # honor the [B, max_new] contract without a prefill
+            return jnp.zeros((prompt.shape[0], 0), jnp.int32)
         logits, cache = self._prefill(self.params, prompt, embeds=embeds)
-        cache = _pad_cache(cache, max_new)
+        # the prefill cache already holds the prompt (+ embeds) positions
+        # and the first token comes straight from the prefill logits, so
+        # only the max_new - 1 decode steps below need cache slots
+        # (positions base .. base + max_new - 2)
+        cache = _pad_cache(cache, max_new - 1)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         base = prompt.shape[1] + (embeds.shape[1] if embeds is not None else 0)
         out = [tok]

@@ -8,7 +8,14 @@ import pytest
 from repro.mpc import AGECMPCProtocol, Field, MPCSpec, P_DEFAULT, P_MERSENNE31, connect
 from repro.mpc.api import MPCSession
 from repro.mpc.backends import BatchedBackend, LocalBackend, resolve_backend
-from repro.mpc.tiling import TileMap, choose_block, n_tiles, tile_blocks
+from repro.mpc.tiling import (
+    TileBudgetWarning,
+    TileMap,
+    choose_block,
+    choose_block_cost,
+    n_tiles,
+    tile_blocks,
+)
 
 
 def exact_matmul(a, b, p):
@@ -89,6 +96,46 @@ class TestTiling:
             m = choose_block(s, t, r, k, c)
             assert m % s == 0 and m % t == 0
             assert n_tiles(m, r, k, c) <= 64
+
+    def test_choose_block_lcm_exceeds_every_dim(self):
+        """lcm(s,t) > max(r,k,c): one padded block, partitionable side, no
+        budget warning — the protocol can't go smaller than lcm(s,t)."""
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", TileBudgetWarning)
+            m = choose_block(4, 6, 3, 3, 3)
+        assert m == 12  # lcm(4, 6)
+        assert m % 4 == 0 and m % 6 == 0
+        assert n_tiles(m, 3, 3, 3) == 1
+        # session round-trip through the same edge stays exact
+        spec = MPCSpec(s=4, t=6, z=1)
+        sess = connect(spec)
+        rng = np.random.default_rng(2)
+        a = rng.integers(0, spec.field.p, (3, 3))
+        b = rng.integers(0, spec.field.p, (3, 3))
+        np.testing.assert_array_equal(
+            np.asarray(sess.matmul(a, b, encoded=True)),
+            exact_matmul(a, b, spec.field.p))
+
+    def test_choose_block_cost_over_budget_warns_and_clamps(self):
+        """The documented over-budget fallback: when even the coarsest side
+        exceeds the dispatch budget (batch × tiles), the fewest-dispatch
+        side is returned and TileBudgetWarning is emitted."""
+        from repro.mpc.autotune import DEFAULT_COST
+
+        with pytest.warns(TileBudgetWarning, match="clamping"):
+            m = choose_block_cost(2, 2, 2, 17, 8, 8, 8,
+                                  cost=DEFAULT_COST, batch=8, budget=2)
+        assert m == 8  # coarsest side: one tile per batch element
+        # within budget: no warning
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", TileBudgetWarning)
+            m = choose_block_cost(2, 2, 2, 17, 8, 8, 8,
+                                  cost=DEFAULT_COST, budget=64)
+        assert m % 2 == 0
 
     def test_tile_roundtrip(self):
         rng = np.random.default_rng(0)
@@ -292,6 +339,24 @@ def test_session_fail_below_threshold_raises():
     sess.fail(list(range(12)))                    # 5 alive < t²+z = 6
     with pytest.raises(RuntimeError, match="threshold"):
         sess.matmul(np.ones((4, 4)), np.ones((4, 4)), encoded=True)
+
+
+def test_session_tile_budget_validated_at_connect():
+    """Misconfigured tile budgets fail fast at session construction, not
+    at first matmul inside choose_block (regression)."""
+    spec = MPCSpec(s=2, t=2, z=2)
+    for bad in (0, -3, 2.5, "64", True, None):
+        with pytest.raises(ValueError, match="tile_budget"):
+            connect(spec, tile_budget=bad)
+        with pytest.raises(ValueError, match="tile_budget"):
+            MPCSession(spec, LocalBackend(), tile_budget=bad)
+    # valid budgets (including numpy ints) still connect and serve
+    sess = connect(spec, tile_budget=np.int64(16))
+    assert sess._tile_budget == 16
+    y = sess.matmul(np.eye(4), np.eye(4), encoded=True)
+    np.testing.assert_array_equal(np.asarray(y), np.eye(4, dtype=np.int64))
+    with pytest.raises(TypeError, match="MPCSpec"):
+        MPCSession("not-a-spec", LocalBackend())
 
 
 def test_batched_backend_attrition_replans():

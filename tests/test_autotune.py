@@ -1,0 +1,267 @@
+"""Autotuned spec selection (DESIGN.md §7): grid agreement with the
+closed forms, cost-model block co-optimization, planner-cache behavior
+under tuner-generated keys, and the attrition-time re-tune path."""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.age import optimal_age_code
+from repro.core.worker_counts import n_age_cmpc, n_entangled_cmpc
+from repro.mpc import CostModel, MPCSpec, connect, tune
+from repro.mpc.autotune import DEFAULT_COST, retune_spec, search
+from repro.mpc.engine import MPCEngine
+from repro.mpc.planner import cache_clear, cache_info, get_plan
+from repro.mpc.protocol import AGECMPCProtocol
+
+# the Theorem-3 validation grid (tests/test_theorem3.py), thinned on z to
+# keep the tuner sweep fast — min-λ agreement is already proven densely
+# there; here we prove the *tuner* lands on the same minima
+GRID = [
+    (s, t, z)
+    for s, t, z in itertools.product(range(1, 7), range(2, 7), (1, 2, 3, 5, 9, 15))
+]
+
+
+def exact_ref(a, b, p):
+    return np.array((a.astype(object).T @ b.astype(object)) % p, np.int64)
+
+
+# ============================================================ grid agreement
+@pytest.mark.parametrize("s,t,z", GRID)
+def test_tune_matches_closed_form_minimum_on_grid(s, t, z):
+    """Acceptance: for every Theorem-3 grid point, the tuned spec's worker
+    count IS the closed-form minimum — and agrees with ``MPCSpec(lam=None)``
+    min-λ resolution and ``optimal_age_code`` (λ* ties toward the largest
+    gap, the Example 1 convention)."""
+    n_min = n_age_cmpc(s, t, z)
+    res = tune(n_min, z, (8, 8, 8), s=s, t=t, schemes=("age",))
+    spec = res.spec
+    assert spec.n_workers == n_min
+    # agrees with the spec-level min-λ resolution ...
+    assert MPCSpec(s=s, t=t, z=z, lam=None).n_workers == n_min
+    # ... and with the enumeration oracle, including the tie convention
+    code, lam_star = optimal_age_code(s, t, z)
+    assert spec.n_workers == code.n_workers
+    assert spec.lam == lam_star
+    # one worker short of the minimum: infeasible by construction
+    if n_min > 1:
+        with pytest.raises(ValueError, match="below the family minimum"):
+            tune(n_min - 1, z, (8, 8, 8), s=s, t=t, schemes=("age",))
+
+
+@pytest.mark.parametrize("s,t,z", [(2, 2, 2), (1, 3, 2), (3, 2, 4)])
+def test_tune_baseline_schemes_sized_by_enumeration(s, t, z):
+    """Entangled / PolyDot candidates carry the degree-set enumeration
+    counts — the runtime's authority (the quoted per-regime closed forms
+    are only exact on some cells; tests/test_theorem3.py)."""
+    from repro.core.age import entangled_code, polydot_code
+
+    cands = search(10_000, z, (8, 8, 8), s=s, t=t,
+                   schemes=("entangled", "polydot"))
+    by_scheme = {c.scheme: c for c in cands}
+    assert by_scheme["entangled"].n_workers == entangled_code(s, t, z).n_workers
+    assert by_scheme["polydot"].n_workers == polydot_code(s, t, z).n_workers
+
+
+def test_tune_entangled_closed_form_exact_regime():
+    """On a Υ₁ cell (z > ts − s) the quoted Lemma 4 closed form IS exact,
+    so the candidate count matches it too."""
+    s, t, z = 1, 2, 2  # z=2 > ts-s=1
+    cands = search(10_000, z, (8, 8, 8), s=s, t=t, schemes=("entangled",))
+    assert cands[0].n_workers == n_entangled_cmpc(s, t, z)
+
+
+def test_tune_free_search_respects_budget_and_ranks_deterministically():
+    res = tune(17, 2, (48, 48, 48))
+    assert res.best.n_workers <= 17
+    for c in res.candidates:
+        assert c.n_workers <= 17
+        assert c.m % c.s == 0 and c.m % c.t == 0
+    # ranked best-first under the weighted objective
+    scores = [c.sort_key() for c in res.candidates]
+    assert scores == sorted(scores)
+    # deterministic: same inputs, same ranking
+    res2 = tune(17, 2, (48, 48, 48))
+    assert res2.candidates == res.candidates
+    assert res2.spec == res.spec
+
+
+def test_tune_lambda_always_minimizes_workers_within_partition():
+    """Whatever the weights, every overhead term grows with N, so the gap
+    choice inside one (s, t) is always min_λ Γ(λ) — eq. (13)."""
+    for cost in (CostModel(), CostModel(computation=1, storage=0,
+                                        communication=0),
+                 CostModel(0, 0, 0, dispatch=1.0)):
+        res = tune(n_age_cmpc(3, 2, 5), 5, (12, 12, 12), s=3, t=2,
+                   schemes=("age",), cost=cost)
+        assert res.spec.n_workers == n_age_cmpc(3, 2, 5)
+
+
+def test_cost_model_weights_arbitrate_partitions():
+    """A communication-dominated objective prefers fewer workers (ζ ~ N²);
+    a computation-dominated one prefers more parallelism (ξ ~ m³/(st²))."""
+    budget, z, shape = 60, 2, (64, 64, 64)
+    comm = tune(budget, z, shape, cost=CostModel(0.0, 0.0, 1.0))
+    comp = tune(budget, z, shape, cost=CostModel(1.0, 0.0, 0.0))
+    assert comm.best.n_workers <= comp.best.n_workers
+    st2 = lambda c: c.s * c.t * c.t  # noqa: E731
+    assert st2(comp.best) >= st2(comm.best)
+
+
+def test_tune_over_budget_warns_like_choose_block_cost():
+    """A tuned spec whose baked-in m bypasses the session block search
+    must emit the documented TileBudgetWarning at tune time."""
+    import warnings
+
+    from repro.mpc.tiling import TileBudgetWarning
+
+    with pytest.warns(TileBudgetWarning, match="clamping"):
+        res = tune(24, 2, (8, 8, 8), batch=8, tile_budget=2)
+    assert res.best.over_budget
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", TileBudgetWarning)
+        tune(24, 2, (8, 8, 8), tile_budget=64)  # within budget: silent
+
+
+def test_cost_model_validation_and_shapes():
+    with pytest.raises(ValueError, match="weight"):
+        CostModel(computation=-1.0)
+    with pytest.raises(ValueError, match="shape"):
+        tune(17, 2, (8, 8))
+    with pytest.raises(ValueError, match="inner dims"):
+        tune(17, 2, ((3, 4), (5, 6)))
+    r = tune(17, 2, ((3, 8), (8, 5)))
+    assert r.shape == (3, 8, 5)
+    with pytest.raises(ValueError, match="worker budget"):
+        tune(0, 2, (8, 8, 8))
+    with pytest.raises(ValueError, match="unknown scheme"):
+        tune(17, 2, (8, 8, 8), schemes=("nope",))
+
+
+# ====================================================== tuned specs at runtime
+def test_tuned_spec_connect_matmul_round_trip():
+    res = tune(24, 2, (10, 24, 7))
+    sess = res.connect()
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((10, 24))
+    b = rng.standard_normal((24, 7))
+    y = np.asarray(sess.matmul(a, b))
+    assert y.shape == (10, 7)
+    np.testing.assert_allclose(y, a @ b, atol=0.1)
+
+
+def test_session_cost_model_block_choice_exact():
+    """A session opened with a CostModel routes block choice through the
+    cost-aware search and stays exact on encoded operands."""
+    spec = MPCSpec(s=2, t=2, z=2)
+    sess = connect(spec, cost=DEFAULT_COST)
+    p = spec.field.p
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, p, (6, 20))
+    b = rng.integers(0, p, (20, 9))
+    y = np.asarray(sess.matmul(a, b, encoded=True))
+    want = np.array((a.astype(object) @ b.astype(object)) % p, np.int64)
+    np.testing.assert_array_equal(y, want)
+
+
+def test_planner_cache_under_tuner_generated_keys():
+    """``cache_info``/``cache_clear`` semantics hold for tuner-made specs:
+    tuning builds NO plans; the first ``spec.plan()`` misses, repeats hit,
+    and ``cache_clear`` resets counters and evicts the tuned key."""
+    cache_clear()
+    res = tune(17, 2, (16, 16, 16))
+    info0 = cache_info()
+    assert info0["size"] == 0 and info0["misses"] == 0  # tuning is plan-free
+    plan = res.spec.plan()
+    info1 = cache_info()
+    assert info1["misses"] == 1 and info1["size"] == 1
+    assert res.spec.plan() is plan
+    info2 = cache_info()
+    assert info2["hits"] == info1["hits"] + 1
+    # the tuned key is the spec's plan key
+    s = res.spec
+    assert get_plan(s.scheme, s.s, s.t, s.z, s.lam, s.field, s.m) is plan
+    cache_clear()
+    assert cache_info() == {"hits": 0, "misses": 0, "size": 0}
+    assert res.spec.plan() is not plan  # rebuilt after clear
+
+
+# ============================================================== re-tune path
+def test_retune_spec_fixed_block_divisor_search():
+    spec = retune_spec(8, 2, m=8)
+    assert spec is not None
+    assert spec.m == 8 and 8 % spec.s == 0 and 8 % spec.t == 0
+    assert spec.n_workers <= 8
+    # nothing decodable with 2 survivors at z=2 (any code needs t²+z more)
+    assert retune_spec(2, 2, m=8) is None
+
+
+def test_pool_retune_beats_or_matches_replan_objective():
+    from repro.mpc.elastic import ElasticPool
+
+    pool = ElasticPool(s=2, t=2, z=2, m=8, spares=3)
+    pool.fail(list(range(12)))  # 8 alive of 20: below N=17
+    tuned = pool.retune()
+    greedy = pool.replan()
+    assert tuned is not None and greedy is not None
+    alive = int(pool.alive.sum())
+    assert tuned.n_workers <= alive and greedy.n_workers <= alive
+    cm = DEFAULT_COST
+    score = lambda pr: cm.total(8, pr.s, pr.t, 2, pr.n_workers, 1)  # noqa: E731
+    assert score(tuned) <= score(greedy)
+
+
+def test_engine_retune_bit_identical_to_fixed_spec():
+    """Acceptance: the elastic re-tune path decodes bit-identically to the
+    fixed-spec path under the same survivor masks."""
+    eng = MPCEngine(spares=1, max_batch=8)
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol.from_spec(spec)
+    p = spec.field.p
+    eng.fail(list(range(proto.n_workers - 7)), spec=spec)  # 8 of 18 alive
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    key = jax.random.PRNGKey(11)
+    rid = eng.submit(a, b, key=key, spec=spec)
+    y = eng.flush()[rid]
+    assert eng.stats["replans"] == 1 and eng.stats["retunes"] == 1
+    np.testing.assert_array_equal(np.asarray(y), exact_ref(a, b, p))
+
+    served = eng._replans[proto.plan_key]
+    assert served.n_workers <= 8
+    # fixed-spec reference: the retuned protocol run directly, same key
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(served.run(a, b, key)))
+
+    # same survivor mask on both paths (sized for the retuned worker set)
+    mask = np.ones(served.n_workers, bool)
+    mask[served.n_workers - 1] = False
+    rid2 = eng.submit(a, b, key=key, spec=served.spec, survivors=mask)
+    y2 = eng.flush()[rid2]
+    np.testing.assert_array_equal(
+        np.asarray(y2), np.asarray(served.run(a, b, key, survivors=mask)))
+    np.testing.assert_array_equal(np.asarray(y2), exact_ref(a, b, p))
+
+
+def test_engine_cost_model_retune_is_used():
+    """An engine built with explicit weights escalates through the tuned
+    candidate for those weights."""
+    cm = CostModel(communication=1.0, computation=0.0, storage=0.0)
+    eng = MPCEngine(spares=1, max_batch=4, cost=cm)
+    spec = MPCSpec(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol.from_spec(spec)
+    eng.fail(list(range(proto.n_workers - 7)), spec=spec)
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, spec.field.p, (8, 8))
+    b = rng.integers(0, spec.field.p, (8, 8))
+    rid = eng.submit(a, b, key=jax.random.PRNGKey(0), spec=spec)
+    y = eng.flush()[rid]
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, spec.field.p))
+    assert eng.stats["retunes"] == 1
+    served = eng._replans[proto.plan_key]
+    want = retune_spec(8, 2, m=8, cost=cm)
+    assert served.spec.plan_key() == want.plan_key()

@@ -7,7 +7,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import transformer as tr
 from repro.models.api import get_model
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, _pad_cache
 
 
 def test_generate_in_vocab_and_deterministic():
@@ -21,6 +21,43 @@ def test_generate_in_vocab_and_deterministic():
     assert out1.shape == (2, 6)
     assert int(out1.max()) < cfg.vocab
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_kv_cache_allocation_exact_with_embeds():
+    """Regression: ``generate`` used to pad the KV cache by ``max_new``
+    while only ``max_new - 1`` decode steps run.  The decode position
+    ``base + i`` must stay in-bounds for every step and ``base`` must
+    equal the prefill length — including the prepended ``embeds`` span."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0, cfg.vocab)
+    embeds = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(2), (1, 3, cfg.d_model))
+    max_new = 4
+
+    _, cache = engine._prefill(params, prompt, embeds=embeds)
+    base = prompt.shape[1] + embeds.shape[1]
+    assert int(cache.length) == base          # prefill spans embeds+prompt
+    assert cache.k.shape[-3] == base
+    padded = _pad_cache(cache, max_new - 1)   # what generate allocates
+    cache_len = padded.k.shape[-3]
+    assert cache_len == base + max_new - 1    # exact: no over-allocation
+    # every decode step writes position base + i, i = 0 .. max_new-2
+    for i in range(max_new - 1):
+        assert base + i < cache_len
+    assert base + (max_new - 1) == cache_len  # the old pad left a dead slot
+
+    out = engine.generate(prompt, max_new, embeds=embeds)
+    assert out.shape == (1, max_new)
+    assert int(out.max()) < cfg.vocab
+    # degenerate request honors the [B, max_new] contract
+    assert engine.generate(prompt, 0, embeds=embeds).shape == (1, 0)
+    # deterministic under the exact-size cache
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(engine.generate(prompt, max_new, embeds=embeds)))
 
 
 def test_generate_matches_teacher_forcing():
