@@ -139,6 +139,8 @@ def main():
 
     facade(records)
     autotune_pairs(records)
+    hetero_pairs(records)
+    sharded_pairs(records)
     write_trajectory("PROTOCOL", records)
 
 
@@ -221,6 +223,99 @@ def autotune_pairs(records, *, quick: bool = False):
               f"candidates={len(res.candidates)};vs-one-plan-build")
 
 
+def hetero_pairs(records, *, quick: bool = False):
+    """Heterogeneous pools (DESIGN.md §8): capacity-aware placement vs
+    capacity-oblivious identity placement on a skewed 2-class roster.
+
+    Per-worker heterogeneity is not physical in this single-process
+    simulation, so the pair's µs are the per-slot **makespan model**
+    (:func:`repro.mpc.workers.modeled_makespan`) evaluated with weights
+    calibrated from this repo's own measured trajectory
+    (``CostModel.from_bench``; paper weights if absent) — fused leg =
+    tuner placement, baseline leg = identity placement of the same tuned
+    spec.  The placed session additionally runs for real and must stay
+    exact, so the win is a calibrated model over a verified execution.
+    """
+    import numpy as np
+
+    from repro.mpc import CostModel, WorkerClass, WorkerPool, connect, tune
+    from repro.mpc.workers import modeled_makespan
+
+    phone = WorkerClass("phone", compute=10.0, storage=8.0, link=25.0)
+    gateway = WorkerClass("gateway", compute=1.0, storage=1.0, link=1.0)
+    pool = WorkerPool.of((phone, 12), (gateway, 8))
+    cost = CostModel.from_bench("BENCH_PROTOCOL.json")
+    calibrated = cost != CostModel()
+    side = 16 if quick else 96
+    res = tune(pool=pool, z=2, shape=(side, side, side), cost=cost)
+    spec = res.spec
+    placed_us = modeled_makespan(spec.m, spec.s, spec.t, spec.z,
+                                 spec.n_workers, cost, pool,
+                                 spec.effective_placement)
+    oblivious_us = modeled_makespan(spec.m, spec.s, spec.t, spec.z,
+                                    spec.n_workers, cost, pool,
+                                    tuple(range(spec.n_workers)))
+    # the placed spec must serve exactly (model wins don't count otherwise)
+    sess = connect(spec, tile_budget=res.tile_budget)
+    rng = np.random.default_rng(31)
+    a = rng.integers(0, spec.field.p, (side, side))
+    b = rng.integers(0, spec.field.p, (side, side))
+    y = np.asarray(sess.matmul(a, b, encoded=True))
+    want = np.array((a.astype(object) @ b.astype(object)) % spec.field.p,
+                    np.int64)
+    assert np.array_equal(y, want), "placed session diverged"
+    emit_pair(
+        records, f"hetero_tune_m{spec.m}", placed_us, oblivious_us,
+        f"pool=12xphone+8xgateway;spec={spec.scheme}:s{spec.s}t{spec.t}"
+        f"N{spec.n_workers};makespan-model;calibrated={calibrated}")
+
+
+def sharded_pairs(records, *, quick: bool = False):
+    """Sharded autotune leg (ROADMAP): mesh-shape-aware dispatch weight.
+
+    On a D-device mesh every coded block is one shard_map launch running
+    the N workers in ``ceil(N/D)`` waves, so the block search should
+    weigh dispatch by the wave count.  Pair: the mesh-aware sharded
+    session (coarser tiling, fewer launches) vs a dispatch-oblivious
+    sharded session (``dispatch_scale`` forced to 1) on a skinny
+    reduction-heavy workload — real wall time, same exact results.
+    """
+    import jax
+    import numpy as np
+
+    from repro.mpc import CostModel, MPCSpec, connect
+    from repro.mpc.backends import ShardedBackend
+
+    class _Oblivious(ShardedBackend):
+        def dispatch_scale(self, spec):
+            return 1.0
+
+    mesh = jax.make_mesh((1,), ("model",))
+    spec = MPCSpec(s=2, t=2, z=2)
+    cm = CostModel(dispatch=1e4)
+    aware = connect(spec, backend="sharded", mesh=mesh, cost=cm)
+    oblivious = connect(spec, _Oblivious(mesh=mesh), cost=cm)
+    k = 64 if quick else 256
+    rng = np.random.default_rng(37)
+    p = spec.field.p
+    a = rng.integers(0, p, (8, k))
+    b = rng.integers(0, p, (k, 8))
+    want = np.array((a.astype(object) @ b.astype(object)) % p, np.int64)
+    assert np.array_equal(
+        np.asarray(aware.matmul(a, b, encoded=True)), want)
+    assert np.array_equal(
+        np.asarray(oblivious.matmul(a, b, encoded=True)), want)
+    iters, best_of = (2, 1) if quick else (3, 2)
+    us_aware = time_us(aware.matmul, a, b, encoded=True,
+                       iters=iters, warmup=1, best_of=best_of)
+    us_obl = time_us(oblivious.matmul, a, b, encoded=True,
+                     iters=iters, warmup=1, best_of=best_of)
+    blocks = (aware.stats["blocks"], oblivious.stats["blocks"])
+    emit_pair(records, f"sharded_dispatch_k{k}", us_aware, us_obl,
+              f"waves={spec.n_workers};blocks aware/oblivious="
+              f"{blocks[0]}/{blocks[1]}")
+
+
 def smoke():
     """Fast CI leg: fused + survivor + batched-engine + autotuned-session
     paths must produce exact products at reduced m.  Quick-mode
@@ -275,6 +370,7 @@ def smoke():
 
     auto_records = []
     autotune_pairs(auto_records, quick=True)
+    hetero_pairs(auto_records, quick=True)
     write_trajectory("PROTOCOL", auto_records)
 
     print(f"protocol smoke OK: fused, survivor, engine batch of {len(rids)} "

@@ -16,10 +16,15 @@ lives in :mod:`repro.mpc.engine`, elastic worker pools in
 The paper's optimization layer is executable too (DESIGN.md §7):
 ``MPCSpec.tune(N, z, shape)`` / :func:`repro.mpc.autotune.tune` search the
 generalized code family under the closed-form worker counts and rank by
-the weighted Cor. 8–10 overhead objective (:class:`CostModel`).
+the weighted Cor. 8–10 overhead objective (:class:`CostModel`), with
+heterogeneous edge rosters first-class (DESIGN.md §8): ``tune(pool=
+WorkerPool.of((PHONE, 12), (GATEWAY, 8)), ...)`` co-optimizes which
+devices serve which evaluation points, and ``CostModel.from_bench``
+calibrates the weights from the measured trajectory.
 """
 from .api import MPCSession, MPCSpec, connect
 from .autotune import CostModel, TuneResult, tune
+from .workers import WorkerClass, WorkerPool
 from .field import ACC_WINDOW, DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31, acc_window
 from .planner import (
     ProtocolPlan,
@@ -39,6 +44,8 @@ __all__ = [
     "MPCSession",
     "MPCSpec",
     "TuneResult",
+    "WorkerClass",
+    "WorkerPool",
     "tune",
     "P_DEFAULT",
     "P_MERSENNE31",

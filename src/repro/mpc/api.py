@@ -50,6 +50,7 @@ from .tiling import (
     choose_block_cost,
     tile_blocks,
 )
+from .workers import WorkerPool
 
 SCHEMES = ("age", "entangled", "polydot")
 
@@ -69,6 +70,17 @@ class MPCSpec:
     m      : optional default protocol block side (``s|m`` and ``t|m``).
              When unset, the session's shape adapter picks a block size per
              workload (:func:`repro.mpc.tiling.choose_block`).
+    pool   : optional heterogeneous device roster
+             (:class:`repro.mpc.workers.WorkerPool`, DESIGN.md §8).  With a
+             pool, worker ids seen by :meth:`MPCSession.fail` /
+             :meth:`MPCEngine.fail` are roster *device* ids and are
+             translated to protocol slots through the placement; survivor
+             masks stay slot-indexed (``[N]`` bools).
+    placement : optional evaluation-point placement — the roster device id
+             serving each protocol slot ``0..N-1`` (distinct, in range).
+             ``None`` with a pool means the identity prefix (device ``n``
+             serves slot ``n`` — the capacity-oblivious default; the tuner
+             bakes in an optimized one).
     """
 
     s: int
@@ -78,6 +90,8 @@ class MPCSpec:
     scheme: str = "age"
     field: Field = DEFAULT_FIELD
     m: Optional[int] = None
+    pool: Optional[WorkerPool] = None
+    placement: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.scheme not in SCHEMES:
@@ -95,6 +109,18 @@ class MPCSpec:
                                    or self.m % self.t):
             raise ValueError(
                 f"need s|m and t|m: s={self.s} t={self.t} m={self.m}")
+        if self.pool is not None and not isinstance(self.pool, WorkerPool):
+            raise TypeError(f"pool must be a WorkerPool, got {self.pool!r}")
+        if self.placement is not None:
+            if self.pool is None:
+                raise ValueError("placement requires a pool")
+            pl = tuple(int(d) for d in self.placement)
+            if len(set(pl)) != len(pl) or any(
+                    not 0 <= d < len(self.pool) for d in pl):
+                raise ValueError(
+                    f"placement must be distinct device ids within the "
+                    f"{len(self.pool)}-device pool, got {self.placement!r}")
+            object.__setattr__(self, "placement", pl)
 
     # ------------------------------------------------------------ identity
     def replace(self, **kw) -> "MPCSpec":
@@ -102,9 +128,61 @@ class MPCSpec:
         return dataclasses.replace(self, **kw)
 
     def plan_key(self, m: Optional[int] = None) -> PlanKey:
-        """The process-wide planner-cache key for this spec (+ block side)."""
-        return (self.scheme, self.s, self.t, self.z, self.lam,
+        """The process-wide planner-cache key for this spec (+ block side).
+
+        Pool-free specs keep the legacy 7-tuple; a pool appends the
+        effective placement (the permutation never changes the plan's
+        tables — the qualified key aliases the shared plan — but keeps
+        placement-distinct groups apart in plan_key-keyed maps)."""
+        base = (self.scheme, self.s, self.t, self.z, self.lam,
                 self.field.p, self._block(m))
+        if self.pool is None:
+            return base
+        return base + (self.effective_placement,)
+
+    @property
+    def pool_key(self) -> Optional[Tuple]:
+        """Hashable roster signature, or ``None`` without a pool."""
+        return None if self.pool is None else self.pool.key
+
+    def group_key(self, m: Optional[int] = None) -> Tuple:
+        """Serving-group identity: ``plan_key`` alone for pool-free specs
+        (legacy-compatible), extended with the pool signature otherwise —
+        the ``(plan_key, pool_key)`` grouping the batched engine uses."""
+        pk = self.plan_key(m)
+        return pk if self.pool is None else pk + (self.pool.key,)
+
+    @property
+    def effective_placement(self) -> Optional[Tuple[int, ...]]:
+        """The placement actually in force: ``None`` without a pool, the
+        explicit placement when set (validated against N), else the
+        identity prefix — device ``n`` serves slot ``n``."""
+        if self.pool is None:
+            return None
+        n = self.n_workers
+        if self.placement is not None:
+            if len(self.placement) != n:
+                raise ValueError(
+                    f"placement has {len(self.placement)} devices but the "
+                    f"code needs N={n} workers")
+            return self.placement
+        if len(self.pool) < n:
+            raise ValueError(
+                f"pool has {len(self.pool)} devices < N={n}")
+        return tuple(range(n))
+
+    def slots_for(self, devices) -> Tuple[int, ...]:
+        """Translate worker ids to protocol slots for this spec.
+
+        Without a pool, ids already ARE slots (legacy semantics).  With a
+        pool, ids are roster device ids; devices outside the placement
+        (spares, bystanders) have no slot and are dropped — the elastic
+        layer tracks those separately."""
+        pl = self.effective_placement
+        if pl is None:
+            return tuple(sorted(int(d) for d in devices))
+        inv = {d: i for i, d in enumerate(pl)}
+        return tuple(sorted(inv[int(d)] for d in devices if int(d) in inv))
 
     def _block(self, m: Optional[int]) -> int:
         m = self.m if m is None else m
@@ -133,7 +211,8 @@ class MPCSpec:
 
     # ----------------------------------------------------------- factories
     @classmethod
-    def tune(cls, n_workers: int, z: int, shape, **kw) -> "MPCSpec":
+    def tune(cls, n_workers: Optional[int] = None, z: int = None,
+             shape=None, **kw) -> "MPCSpec":
         """Autotuned spec for a worker budget + workload (DESIGN.md §7).
 
         Solves the paper's optimization layer: search AGE over every
@@ -145,7 +224,10 @@ class MPCSpec:
         frozen spec with its block side baked in —
         ``connect(MPCSpec.tune(N, z, shape))`` is the one-liner.  Use
         :func:`repro.mpc.autotune.tune` directly for the full ranked
-        candidate list and the tuned tile budget.
+        candidate list and the tuned tile budget.  ``pool=`` (a
+        :class:`repro.mpc.workers.WorkerPool`) switches the objective to
+        the per-worker-weighted form and bakes the co-optimized
+        evaluation-point placement into the returned spec (DESIGN.md §8).
         """
         from .autotune import tune as _tune
 
@@ -154,7 +236,8 @@ class MPCSpec:
     def plan(self, m: Optional[int] = None) -> ProtocolPlan:
         """The cached data-independent tables for this spec at block ``m``."""
         return get_plan(self.scheme, self.s, self.t, self.z, self.lam,
-                        self.field, self._block(m))
+                        self.field, self._block(m),
+                        placement=self.effective_placement)
 
     def protocol(self, m: Optional[int] = None):
         """An :class:`~repro.mpc.protocol.AGECMPCProtocol` for block ``m``."""
@@ -207,11 +290,18 @@ class BlockFailure:
 
 @dataclasses.dataclass
 class _Request:
-    """One logical session matmul: its block ops + how to reassemble."""
+    """One logical session matmul: its block ops + how to reassemble.
+
+    ``raw`` keeps the un-tiled call (operands, key, flags + the logical
+    ``shape``/``batch``) so a queued request can be re-tiled when an
+    attrition drain adopts a spec with a different block side
+    (DESIGN.md §8); ``None`` for degenerate zero-size requests.
+    """
 
     rid: int
     ops: List[BlockOp]
     build: Callable[[List[jnp.ndarray]], jnp.ndarray]
+    raw: Optional[Dict[str, Any]] = None
 
 
 # ================================================================= session
@@ -251,7 +341,8 @@ class MPCSession:
         # search instead of the fixed-(s,t) doubling rule (DESIGN.md §7)
         self._cost = cost
         self.failures: Dict[int, str] = {}
-        self.stats = {"matmuls": 0, "blocks": 0, "flushes": 0}
+        self.stats = {"matmuls": 0, "blocks": 0, "flushes": 0,
+                      "retiles": 0, "masks_dropped": 0}
 
     # ------------------------------------------------------------- helpers
     def validate_survivors(self, survivors) -> np.ndarray:
@@ -261,6 +352,10 @@ class MPCSession:
     def fail(self, workers) -> None:
         """Mark logical workers dead for every later matmul/flush.
 
+        Without a pool the ids are protocol slots; with a
+        :class:`~repro.mpc.workers.WorkerPool` spec they are roster
+        *device* ids, translated to slots through the placement (devices
+        outside the placement only matter to elastic spare inventories).
         Local/sharded backends fold the dead set into each decode's
         survivor mask (phase-3 coded tolerance); the batched backend
         additionally reports attrition to its elastic pools, so spares and
@@ -278,7 +373,7 @@ class MPCSession:
         if self.backend.handles_attrition or not self._dead:
             return ops
         alive = np.ones(self.spec.n_workers, bool)
-        for w in self._dead:
+        for w in self.spec.slots_for(self._dead):
             if w < alive.size:
                 alive[w] = False
         return [dataclasses.replace(
@@ -334,7 +429,14 @@ class MPCSession:
         batched backend turns that into one engine flush).  Failures are
         isolated per request in :attr:`failures` (``rid → reason``,
         replaced each flush), mirroring ``MPCEngine`` semantics.
+
+        Replan drain (DESIGN.md §8): when session attrition has pushed the
+        backing pool below N and the free re-tune prefers a *different*
+        block side than the in-flight spec, queued requests are re-tiled
+        at the new optimum before serving (``stats["retiles"]``) instead
+        of pinning to the old ``m`` — the old group simply drains.
         """
+        self._maybe_retile()
         queue, self._pending = self._pending, []
         self.failures = {}
         ops: List[BlockOp] = []
@@ -357,11 +459,65 @@ class MPCSession:
             results[req.rid] = req.build(chunk)
         return results
 
+    # ------------------------------------------------------- replan drain
+    def _maybe_retile(self) -> None:
+        """Adopt a drain re-tune before tiling hits the backend.
+
+        Only engages when (a) the session has reported attrition, (b) the
+        backend can answer a free re-tune (``drain_spec``; the batched
+        backend resolves it through its engine pools) and (c) that
+        re-tune's optimal block side differs from the in-flight spec's.
+        Queued requests holding their raw operands are then rebuilt under
+        the new spec (same rids); per-request survivor masks sized for the
+        old worker set are dropped (``stats["masks_dropped"]``).  For a
+        pool spec the dead set is KEPT — the adopted spec carries the same
+        original roster (its placement just avoids the dead devices), so
+        device ids stay valid.  For an int-N spec the dead slot ids named
+        workers of the old protocol and index nothing the new serving
+        group runs on, so the set (and the backend's view of it) resets.
+        """
+        if not self._pending or not self._dead:
+            return
+        raws = [r.raw for r in self._pending
+                if r.raw is not None and r.raw["m"] is None]
+        if not raws:
+            return
+        # the largest queued workload drives the block side, like one
+        # adapter call would
+        pick = max(raws, key=lambda raw: raw["batch"] * int(
+            np.prod(raw["shape"], dtype=np.int64)))
+        new = self.backend.drain_spec(
+            self.spec, pick["shape"], batch=pick["batch"],
+            cost=self._cost, tile_budget=self._tile_budget)
+        if new is None:
+            return
+        old_spec, self.spec = self.spec, new
+        self.stats["retiles"] += 1
+        if old_spec.pool is None:
+            self._dead.clear()
+            self.backend.fail(frozenset())   # reset the backend's view too
+        queue, self._pending = self._pending, []
+        for req in queue:
+            raw = req.raw
+            if raw is None or raw["m"] is not None:
+                self._pending.append(req)  # pinned-m / degenerate: keep
+                continue
+            surv = raw["survivors"]
+            if surv is not None:
+                surv = None
+                self.stats["masks_dropped"] += 1
+            self.stats["blocks"] -= len(req.ops)
+            self._pending.append(self._build_request(
+                raw["a"], raw["b"], key=raw["key"], survivors=surv,
+                encoded=raw["encoded"], m=None, rid=req.rid))
+
     # -------------------------------------------------- request construction
-    def _build_request(self, a, b, *, key, survivors, encoded, m) -> _Request:
+    def _build_request(self, a, b, *, key, survivors, encoded, m,
+                       rid: Optional[int] = None) -> _Request:
         f = self.spec.field
         a = jnp.asarray(a)
         b = jnp.asarray(b)
+        raw_a, raw_b = a, b      # pre-normalization operands, for re-tiling
         a_vec, b_vec = a.ndim == 1, b.ndim == 1
         if a_vec:
             a = a[None, :]
@@ -408,7 +564,7 @@ class MPCSession:
                 zeros = zeros[..., 0]
             if a_vec:
                 zeros = zeros[0] if b_folded else zeros[..., 0, :]
-            return self._finish_request([], lambda outs: zeros)
+            return self._finish_request([], lambda outs: zeros, rid=rid)
 
         if m is not None:
             # route the override through the spec so the s|m / t|m rule
@@ -417,10 +573,18 @@ class MPCSession:
         elif self.spec.m:
             block = self.spec.m
         elif self._cost is not None:
+            # mesh-shape-aware dispatch (DESIGN.md §8): a backend whose
+            # per-block launch serializes (sharded waves of ceil(N/D))
+            # scales the dispatch term of the block search
+            cost = self._cost
+            scale = self.backend.dispatch_scale(self.spec)
+            if scale != 1.0 and hasattr(cost, "with_dispatch_scale"):
+                cost = cost.with_dispatch_scale(scale)
             block = choose_block_cost(
                 self.spec.s, self.spec.t, self.spec.z, self.spec.n_workers,
-                r, kdim, c, cost=self._cost, batch=len(pieces),
-                budget=self._tile_budget)
+                r, kdim, c, cost=cost, batch=len(pieces),
+                budget=self._tile_budget, pool=self.spec.pool,
+                placement=self.spec.effective_placement)
         else:
             block = choose_block(self.spec.s, self.spec.t, r, kdim, c,
                                  budget=self._tile_budget)
@@ -475,15 +639,20 @@ class MPCSession:
                 out = out[0] if b_folded else out[..., 0, :]
             return out
 
-        return self._finish_request(ops, build)
+        raw = {"a": raw_a, "b": raw_b, "key": key, "survivors": survivors,
+               "encoded": encoded, "m": m, "shape": (r, kdim, c),
+               "batch": n_pieces}
+        return self._finish_request(ops, build, raw=raw, rid=rid)
 
-    def _finish_request(self, ops: List[BlockOp],
-                        build: Callable) -> _Request:
-        rid = self._next_rid
-        self._next_rid += 1
-        self.stats["matmuls"] += 1
+    def _finish_request(self, ops: List[BlockOp], build: Callable, *,
+                        raw: Optional[Dict[str, Any]] = None,
+                        rid: Optional[int] = None) -> _Request:
+        if rid is None:  # a drain re-tile reuses the caller-visible rid
+            rid = self._next_rid
+            self._next_rid += 1
+            self.stats["matmuls"] += 1
         self.stats["blocks"] += len(ops)
-        return _Request(rid=rid, ops=ops, build=build)
+        return _Request(rid=rid, ops=ops, build=build, raw=raw)
 
 
 # ================================================================= connect
@@ -499,11 +668,15 @@ def connect(spec: MPCSpec, backend: str = "local", **opts) -> MPCSession:
     (base PRNG key), ``tile_budget`` (shape-adapter dispatch cap, validated
     here so misconfiguration fails at connect time) and ``cost`` (a
     :class:`repro.mpc.autotune.CostModel`; block sides then come from the
-    cost-model-aware search, and the batched backend's engine re-tunes
-    under the same weights on attrition).  With ``cost`` set the budget
-    caps the *whole* workload's dispatches — batch × tiles, warning on
-    clamp — whereas the default path caps per-piece tiles only
-    (:func:`repro.mpc.tiling.choose_block_cost`).
+    cost-model-aware search — scaled by the backend's ``dispatch_scale``
+    and weighted by the spec's pool when present — and the batched
+    backend's engine re-tunes under the same weights on attrition).  With
+    ``cost`` set the budget caps the *whole* workload's dispatches —
+    batch × tiles, warning on clamp — whereas the default path caps
+    per-piece tiles only (:func:`repro.mpc.tiling.choose_block_cost`).
+    A spec carrying a :class:`repro.mpc.workers.WorkerPool` changes
+    ``fail`` ids to roster device ids and makes the batched backend's
+    elastic pools provision high-capacity spares (DESIGN.md §8).
     """
     from .backends import resolve_backend
 

@@ -32,6 +32,14 @@ module is the bridge:
   batched engine's escalation path resolve through it before falling back
   to the legacy greedy ``replan``.
 
+Heterogeneous pools (DESIGN.md §8): every entry point takes ``pool=``
+(a :class:`~repro.mpc.workers.WorkerPool`); the objective then scales
+each Cor. 8–10 term by the placed bottleneck device, candidates carry an
+evaluation-point placement, and :meth:`CostModel.from_bench` calibrates
+the µs/scalar weights from the measured ``BENCH_PROTOCOL.json``
+trajectory.  A homogeneous pool is score- and ranking-identical to the
+bare ``int N`` budget.
+
 Candidate worker counts come from the memoized degree-set enumeration
 (:func:`repro.mpc.planner._resolve_code` — always correct by
 construction); ``tests/test_autotune.py`` proves the tuner agrees with
@@ -45,12 +53,15 @@ across partitions the weights arbitrate the paper's s/t trade-off
 from __future__ import annotations
 
 import dataclasses
+import json
+import re
 from typing import Optional, Sequence, Tuple
 
 from ..core.overheads import Overheads, overheads
 from .field import DEFAULT_FIELD, Field
 from .planner import _resolve_code
 from .tiling import DEFAULT_TILE_BUDGET, _check_budget, best_block
+from .workers import WorkerPool
 
 #: partition sides searched per axis when (s, t) are free; worker counts
 #: grow ~ st² so the budget prunes far earlier in practice
@@ -91,17 +102,121 @@ class CostModel:
             if not (isinstance(v, (int, float)) and v >= 0):
                 raise ValueError(f"{name} weight must be >= 0, got {v!r}")
 
-    def block(self, m: int, s: int, t: int, z: int, n: int) -> float:
-        """Weighted per-block overhead of one coded ``m×m`` product."""
+    def block(self, m: int, s: int, t: int, z: int, n: int, *,
+              pool: Optional[WorkerPool] = None,
+              placement: Optional[Sequence[int]] = None) -> float:
+        """Weighted per-block overhead of one coded ``m×m`` product.
+
+        With a :class:`~repro.mpc.workers.WorkerPool`, each Cor. 8–10 term
+        is scaled by the worst per-resource slowdown over the *placed*
+        devices (``pool.bottleneck``): the protocol is synchronous, so the
+        slowest assigned worker bounds every phase.  Unit (homogeneous)
+        classes scale by exactly 1.0, so homogeneous pools score — and
+        therefore rank — bit-identically to the legacy ``int N`` path.
+        ``placement`` defaults to :meth:`WorkerPool.place` under these
+        weights.
+        """
         ov = overheads(m, s, t, z, n)
-        return (self.computation * ov.computation
-                + self.storage * ov.storage
-                + self.communication * ov.communication)
+        cmax = smax = lmax = 1.0
+        if pool is not None:
+            if placement is None:
+                placement = pool.place(n, self)
+            cmax, smax, lmax = pool.bottleneck(placement)
+        return (self.computation * ov.computation * cmax
+                + self.storage * ov.storage * smax
+                + self.communication * ov.communication * lmax)
 
     def total(self, m: int, s: int, t: int, z: int, n: int,
-              blocks: int) -> float:
+              blocks: int, *, pool: Optional[WorkerPool] = None,
+              placement: Optional[Sequence[int]] = None) -> float:
         """Workload objective: ``blocks`` coded products + dispatch cost."""
-        return blocks * (self.block(m, s, t, z, n) + self.dispatch)
+        return blocks * (self.block(m, s, t, z, n, pool=pool,
+                                    placement=placement) + self.dispatch)
+
+    def with_dispatch_scale(self, scale: float) -> "CostModel":
+        """These weights with the per-block dispatch term scaled.
+
+        Backends whose per-block launch cost is a multiple of the host
+        baseline report a scale through ``MPCBackend.dispatch_scale`` —
+        the sharded runner packs N logical workers onto a D-device mesh
+        axis in ``ceil(N/D)`` serialized waves, so its dispatch weight is
+        that wave count (DESIGN.md §8).
+        """
+        if scale == 1.0:
+            return self
+        return dataclasses.replace(self, dispatch=self.dispatch * scale)
+
+    # ------------------------------------------------------------ calibration
+    @classmethod
+    def from_bench(cls, path: str = "BENCH_PROTOCOL.json", *,
+                   dispatch: float = 0.0,
+                   fallback: Optional["CostModel"] = None) -> "CostModel":
+        """Weights calibrated from the measured ``BENCH_PROTOCOL.json``
+        trajectory (ROADMAP "Measured cost models").
+
+        Every ``cmpc_*`` pair in the trajectory carries its wall time
+        (``fused_us``) and the Cor. 8–10 scalar counts in the derived
+        column (``xi=…;sigma=…;zeta=…``); fitting ``us ≈ w_ξ·ξ + w_σ·σ +
+        w_ζ·ζ`` over all runs yields per-phase **µs-per-scalar** weights
+        for the backend that produced the file, so predicted ordering
+        tracks wall time on that device class instead of raw scalar
+        counts.  The fit is a deterministic ridge-regularized least
+        squares with an active-set clamp at 0 (collinear trajectories —
+        e.g. two schemes sharing one N — stay solvable; the weights are
+        then ordering-grade, not physical attribution).
+
+        Falls back to the paper's equal weights when the file is absent,
+        malformed, has fewer than 3 usable samples, or fits degenerate
+        (all-zero) weights.
+        """
+        import numpy as np
+
+        fb = cls(dispatch=dispatch) if fallback is None else fallback
+        try:
+            with open(path) as f:
+                runs = json.load(f)
+        except (OSError, ValueError):
+            return fb
+        if not isinstance(runs, list):
+            return fb
+        pat = re.compile(r"xi=([0-9.eE+-]+);sigma=([0-9.eE+-]+);"
+                         r"zeta=([0-9.eE+-]+)")
+        rows, ys = [], []
+        for run in runs:
+            for e in (run.get("entries", []) if isinstance(run, dict)
+                      else []):
+                m = pat.search(str(e.get("derived", "")))
+                us = e.get("fused_us")
+                if m and isinstance(us, (int, float)) and us > 0:
+                    try:
+                        rows.append([float(g) for g in m.groups()])
+                        ys.append(float(us))
+                    except ValueError:
+                        continue
+        if len(rows) < 3:
+            return fb
+        x = np.asarray(rows, float)
+        y = np.asarray(ys, float)
+        scale = x.max(axis=0)
+        scale[scale == 0] = 1.0
+        xs = x / scale
+        active = [0, 1, 2]
+        w = np.zeros(3)
+        while active:
+            a = xs[:, active]
+            g = a.T @ a + 1e-8 * len(xs) * np.eye(len(active))
+            wa = np.linalg.solve(g, a.T @ y)
+            neg = [i for i, wi in zip(active, wa) if wi < 0]
+            if not neg:
+                w[:] = 0.0
+                w[active] = wa
+                break
+            active = [i for i in active if i not in neg]
+        w = w / scale
+        if not (np.all(np.isfinite(w)) and np.any(w > 0)):
+            return fb
+        return cls(computation=float(w[0]), storage=float(w[1]),
+                   communication=float(w[2]), dispatch=dispatch)
 
 
 DEFAULT_COST = CostModel()
@@ -123,6 +238,8 @@ class Candidate:
                                 # the dispatch budget (documented clamp)
     overheads: Overheads        # per coded block, at this candidate's N
     score: float                # CostModel.total over the whole workload
+    placement: Optional[Tuple[int, ...]] = None  # device slot assignment
+                                # when tuning over a WorkerPool
 
     def sort_key(self) -> Tuple:
         """Deterministic ranking: budget-respecting first, then weighted
@@ -195,7 +312,29 @@ def _feasible(n_workers: int, z: int, schemes: Sequence[str],
                         yield scheme, ss, tt, lm, n
 
 
-def search(n_workers: int, z: int, shape, *, batch: int = 1,
+def _pool_budget(n_workers: Optional[int], pool: Optional[WorkerPool],
+                 within=None) -> int:
+    """Resolve the worker budget from an ``int N`` and/or a pool roster
+    (optionally restricted to the ``within`` device subset)."""
+    if pool is not None and not isinstance(pool, WorkerPool):
+        raise TypeError(f"pool must be a WorkerPool, got {pool!r}")
+    if within is not None and pool is None:
+        raise ValueError("within= requires a pool")
+    if pool is None:
+        if n_workers is None:
+            raise ValueError("pass a worker budget n_workers or a pool=")
+        return int(n_workers)
+    avail = len(pool) if within is None else len({int(d) for d in within})
+    budget = avail if n_workers is None else int(n_workers)
+    if budget > avail:
+        raise ValueError(
+            f"worker budget {budget} exceeds the pool's {avail} available "
+            f"devices")
+    return budget
+
+
+def search(n_workers: Optional[int] = None, z: int = None, shape=None, *,
+           pool: Optional[WorkerPool] = None, within=None, batch: int = 1,
            cost: Optional[CostModel] = None,
            schemes: Sequence[str] = ("age", "entangled", "polydot"),
            s: Optional[int] = None, t: Optional[int] = None,
@@ -209,10 +348,21 @@ def search(n_workers: int, z: int, shape, *, batch: int = 1,
     (uncoded BGW, paper footnote 1).  For each feasible ``(scheme, s, t,
     λ)`` the coded tile side is co-optimized against the workload shape
     through :func:`repro.mpc.tiling.block_candidates`.
+
+    With ``pool=`` (a :class:`~repro.mpc.workers.WorkerPool`) the budget
+    defaults to the roster size, each candidate gets an evaluation-point
+    **placement** (its N cheapest devices under these weights, ordered
+    highest-capacity into the heavy low slots), and the score scales every
+    Cor. 8–10 term by the placed bottleneck — a homogeneous pool reproduces
+    the legacy scores and ranking exactly.  ``within=`` restricts the
+    candidate devices to a roster subset (attrition paths pass the healthy
+    device ids); placements always index the *original* roster, so device
+    ids stay stable across re-tunes.
     """
-    if n_workers < 1:
-        raise ValueError(f"worker budget must be >= 1, got {n_workers}")
-    if z < 1:
+    budget = _pool_budget(n_workers, pool, within)
+    if budget < 1:
+        raise ValueError(f"worker budget must be >= 1, got {budget}")
+    if z is None or z < 1:
         raise ValueError(f"privacy bound z must be >= 1, got {z}")
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
@@ -220,15 +370,18 @@ def search(n_workers: int, z: int, shape, *, batch: int = 1,
     r, k, c = _shape3(shape)
     out = []
     for scheme, ss, tt, lm, n in _feasible(
-            n_workers, z, schemes, _axis_range(t, max_partition),
+            budget, z, schemes, _axis_range(t, max_partition),
             _axis_range(s, max_partition), lam):
+        placement = None if pool is None else pool.place(n, cm,
+                                                         within=within)
         m, blocks, over, sc = best_block(
             ss, tt, z, n, r, k, c, cost=cm, batch=batch,
-            budget=tile_budget)
+            budget=tile_budget, pool=pool, placement=placement)
         out.append(Candidate(
             scheme=scheme, s=ss, t=tt, lam=lm, n_workers=n,
             m=m, n_blocks=blocks, over_budget=over,
-            overheads=overheads(m, ss, tt, z, n), score=sc))
+            overheads=overheads(m, ss, tt, z, n), score=sc,
+            placement=placement))
     out.sort(key=Candidate.sort_key)
     return tuple(out)
 
@@ -264,7 +417,8 @@ class TuneResult:
         return connect(self.spec, backend, **opts)
 
 
-def tune(n_workers: int, z: int, shape, *, batch: int = 1,
+def tune(n_workers: Optional[int] = None, z: int = None, shape=None, *,
+         pool: Optional[WorkerPool] = None, within=None, batch: int = 1,
          cost: Optional[CostModel] = None,
          schemes: Sequence[str] = ("age", "entangled", "polydot"),
          s: Optional[int] = None, t: Optional[int] = None,
@@ -275,10 +429,18 @@ def tune(n_workers: int, z: int, shape, *, batch: int = 1,
 
     Parameters
     ----------
-    n_workers : the worker budget N (available edge devices)
+    n_workers : the worker budget N (available edge devices); defaults to
+                the roster size when a ``pool`` is given
     z         : collusion/privacy bound
     shape     : ``(r, k, c)`` or ``((r, k), (k, c))`` — the workload
                 ``[r,k]×[k,c]``
+    pool      : optional :class:`~repro.mpc.workers.WorkerPool` — the
+                heterogeneous roster; the objective becomes per-worker
+                weighted and the winning spec carries the pool plus the
+                co-optimized evaluation-point placement
+    within    : optional device-id subset of ``pool`` to place on (the
+                attrition paths pass the healthy devices; ids stay
+                original-roster-indexed)
     batch     : leading batch depth (multiplies the block count)
     cost      : :class:`CostModel` weights (default: equal weights, no
                 dispatch term — the pure Fig. 3 objective)
@@ -296,16 +458,19 @@ def tune(n_workers: int, z: int, shape, *, batch: int = 1,
 
     if tile_budget < 1:
         raise ValueError(f"tile budget must be >= 1, got {tile_budget}")
-    cands = search(n_workers, z, shape, batch=batch, cost=cost,
-                   schemes=schemes, s=s, t=t, lam=lam,
-                   tile_budget=tile_budget, max_partition=max_partition)
+    cands = search(n_workers, z, shape, pool=pool, within=within,
+                   batch=batch, cost=cost, schemes=schemes, s=s, t=t,
+                   lam=lam, tile_budget=tile_budget,
+                   max_partition=max_partition)
     if not cands:
         raise ValueError(
-            f"no feasible spec: worker budget N={n_workers} is below the "
+            f"no feasible spec: worker budget "
+            f"N={_pool_budget(n_workers, pool, within)} is below the "
             f"family minimum for z={z} (schemes={tuple(schemes)})")
     best = cands[0]
     spec = MPCSpec(s=best.s, t=best.t, z=z, lam=best.lam,
-                   scheme=best.scheme, field=field, m=best.m)
+                   scheme=best.scheme, field=field, m=best.m,
+                   pool=pool, placement=best.placement)
     r, k, c = _shape3(shape)
     # the winner's m is baked into the spec and bypasses the session's
     # block search, so the documented over-budget clamp must warn HERE —
@@ -317,19 +482,28 @@ def tune(n_workers: int, z: int, shape, *, batch: int = 1,
 
 
 # ============================================================ attrition path
-def retune_spec(n_workers: int, z: int, *, m: int,
+def retune_spec(n_workers: Optional[int] = None, z: int = None, *, m: int,
+                pool: Optional[WorkerPool] = None, within=None,
                 field: Field = DEFAULT_FIELD,
                 cost: Optional[CostModel] = None,
                 schemes: Sequence[str] = ("age",),
                 max_partition: Optional[int] = None):
-    """Best spec decodable with ``n_workers`` survivors at a *fixed* block
-    side ``m`` (shares were already tiled for it), or ``None``.
+    """Best spec decodable with the survivors at a *fixed* block side
+    ``m`` (shares were already tiled for it), or ``None``.
 
     The attrition-time tune: candidates are restricted to partitions that
     divide ``m`` (the protocol cannot re-tile in-flight data), the worker
     budget is the surviving pool, and ranking is the same weighted Cor.
     8–10 objective on the single fixed block.  The elastic layer tries
     this *before* the legacy greedy ``replan`` (DESIGN.md §7).
+
+    ``pool`` + ``within``, when given, are the original roster and the
+    **surviving** device ids (the elastic layer passes
+    :meth:`repro.mpc.elastic.ElasticPool.surviving_devices`): the budget
+    defaults to the survivor count, every candidate is placed on the
+    cheapest surviving devices and scored per-worker-weighted, and the
+    returned spec keeps the original roster — device ids stay stable
+    across re-tunes, so failure routing never re-bases.
 
     ``max_partition`` defaults to the same :data:`MAX_PARTITION` bound
     :func:`tune` searches under — this sits on the serving path, and
@@ -339,17 +513,24 @@ def retune_spec(n_workers: int, z: int, *, m: int,
     """
     from .api import MPCSpec
 
+    budget = _pool_budget(n_workers, pool, within)
+    if z is None or z < 1:
+        raise ValueError(f"privacy bound z must be >= 1, got {z}")
     cm = DEFAULT_COST if cost is None else cost
     limit = min(m, MAX_PARTITION if max_partition is None else max_partition)
     divisors = [d for d in range(1, limit + 1) if m % d == 0]
     best: Optional[Tuple[Tuple, Candidate]] = None
-    for scheme, ss, tt, lm, n in _feasible(n_workers, z, schemes,
+    for scheme, ss, tt, lm, n in _feasible(budget, z, schemes,
                                            divisors, divisors, None):
+        placement = None if pool is None else pool.place(n, cm,
+                                                         within=within)
         cand = Candidate(
             scheme=scheme, s=ss, t=tt, lam=lm, n_workers=n,
             m=m, n_blocks=1, over_budget=False,
             overheads=overheads(m, ss, tt, z, n),
-            score=cm.total(m, ss, tt, z, n, 1))
+            score=cm.total(m, ss, tt, z, n, 1, pool=pool,
+                           placement=placement),
+            placement=placement)
         key = cand.sort_key()
         if best is None or key < best[0]:
             best = (key, cand)
@@ -357,4 +538,4 @@ def retune_spec(n_workers: int, z: int, *, m: int,
         return None
     c = best[1]
     return MPCSpec(s=c.s, t=c.t, z=z, lam=c.lam, scheme=c.scheme,
-                   field=field, m=m)
+                   field=field, m=m, pool=pool, placement=c.placement)

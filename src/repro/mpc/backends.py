@@ -46,6 +46,20 @@ class MPCBackend:
     def fail(self, dead: frozenset) -> None:
         """Receive the session's cumulative dead-worker set (ids)."""
 
+    def dispatch_scale(self, spec) -> float:
+        """How much costlier one block dispatch is here than the host
+        baseline (scales the cost model's ``dispatch`` term in the
+        session's block search).  1.0 unless the backend serializes."""
+        return 1.0
+
+    def drain_spec(self, spec, shape, *, batch: int = 1, cost=None,
+                   tile_budget=None):
+        """Free re-tune for *queued* (not yet tiled) work after attrition,
+        or ``None``.  Only backends with pool machinery can answer
+        (DESIGN.md §8); the session re-tiles its queue when the answer's
+        block side differs from the in-flight spec's."""
+        return None
+
 
 class LocalBackend(MPCBackend):
     """Single-process staged-jit execution (fused / pallas / reference)."""
@@ -84,6 +98,17 @@ class ShardedBackend(MPCBackend):
         self.wire_dtype = wire_dtype
         self.prg_masks = prg_masks
         self._runners: Dict[tuple, object] = {}
+
+    def dispatch_scale(self, spec) -> float:
+        """Mesh-shape-aware dispatch weight (ROADMAP "Sharded autotune
+        leg"): N logical workers pack onto the ``axis``-sized mesh
+        round-robin, so every per-block program runs its worker phases in
+        ``ceil(N / axis_size)`` serialized waves — each extra wave is
+        another full launch's worth of host+device dispatch.  The block
+        search therefore coarsens sooner here than on the local backend
+        (axis size vs N)."""
+        d = int(self.mesh.shape[self.axis])
+        return float(-(-spec.n_workers // d))
 
     def _runner(self, proto):
         from .secure_matmul import ShardedCMPC
@@ -128,18 +153,34 @@ class BatchedBackend(MPCBackend):
         if not self._dead:
             return
         pool = self.engine.pool(spec=proto.spec)
+        if pool.device_map is not None:  # pool spec: ids are device ids
+            pool.fail_devices(sorted(self._dead))
+            return
         ids = [w for w in sorted(self._dead) if w < pool.pool_size]
         if ids:
             pool.fail(ids)
 
+    def drain_spec(self, spec, shape, *, batch: int = 1, cost=None,
+                   tile_budget=None):
+        """Resolve the session's drain question through the engine's
+        elastic pools (attrition is reported first, so a drain can engage
+        before the first post-failure flush ever reaches the engine)."""
+        if spec.m is None or not self._dead:
+            return None
+        from .protocol import AGECMPCProtocol
+
+        self._report_attrition(AGECMPCProtocol.from_spec(spec))
+        return self.engine.drain_spec(spec, shape, batch=batch, cost=cost,
+                                      tile_budget=tile_budget)
+
     def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
         if not ops:  # never flush a (possibly shared) engine for nothing
             return []
-        if self._dead:  # once per distinct plan, not once per block
+        if self._dead:  # once per distinct serving group, not per block
             seen = set()
             for op in ops:
-                if op.proto.plan_key not in seen:
-                    seen.add(op.proto.plan_key)
+                if op.proto.group_key not in seen:
+                    seen.add(op.proto.group_key)
                     self._report_attrition(op.proto)
         rids = []
         for op in ops:

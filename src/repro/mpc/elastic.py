@@ -40,11 +40,22 @@ from .api import MPCSpec
 from .field import DEFAULT_FIELD, Field
 from .planner import _resolve_code
 from .protocol import AGECMPCProtocol
+from .workers import WorkerPool
 
 
 @dataclasses.dataclass
 class ElasticPool:
-    """A CMPC plan over ``N + spares`` provisioned workers."""
+    """A CMPC plan over ``N + spares`` provisioned workers.
+
+    With a heterogeneous :class:`~repro.mpc.workers.WorkerPool` roster
+    (DESIGN.md §8): the first N pool slots are the spec's placement
+    (devices chosen/ordered by the tuner), spare slots are drawn from the
+    *unplaced* remainder preferring the highest-capacity devices, and
+    ``device_map`` records the roster device behind every provisioned
+    slot — failure reports arrive in device ids (:meth:`fail_devices`)
+    and re-tuning sees the surviving *capacity vector*, not just the
+    surviving count (:meth:`surviving_pool`).
+    """
 
     s: int
     t: int
@@ -54,6 +65,8 @@ class ElasticPool:
     scheme: str = "age"
     lam: Optional[int] = None
     field: Field = DEFAULT_FIELD
+    pool: Optional[WorkerPool] = None
+    placement: Optional[Tuple[int, ...]] = None
 
     @classmethod
     def from_spec(cls, spec: MPCSpec, *, spares: int = 2,
@@ -61,7 +74,8 @@ class ElasticPool:
         """A pool for one unified spec (block side from ``m`` or ``spec.m``)."""
         return cls(s=spec.s, t=spec.t, z=spec.z, m=spec._block(m),
                    spares=spares, scheme=spec.scheme, lam=spec.lam,
-                   field=spec.field)
+                   field=spec.field, pool=spec.pool,
+                   placement=spec.effective_placement)
 
     @property
     def spec(self) -> MPCSpec:
@@ -70,8 +84,20 @@ class ElasticPool:
     def __post_init__(self):
         self.proto = AGECMPCProtocol.from_spec(MPCSpec(
             s=self.s, t=self.t, z=self.z, lam=self.lam,
-            scheme=self.scheme, field=self.field, m=self.m))
-        self.pool_size = self.proto.n_workers + self.spares
+            scheme=self.scheme, field=self.field, m=self.m,
+            pool=self.pool, placement=self.placement))
+        n = self.proto.n_workers
+        if self.pool is None:
+            self.device_map: Optional[Tuple[int, ...]] = None
+            self.pool_size = n + self.spares
+        else:
+            # spare inventory: the unplaced remainder of the roster,
+            # highest-capacity first (the spare-preference contract) —
+            # clamped to what the roster actually has left
+            self.placement = self.proto.placement
+            spare_devs = self.pool.spares_for(self.placement)[: self.spares]
+            self.device_map = tuple(self.placement) + tuple(spare_devs)
+            self.pool_size = n + len(spare_devs)
         self.alive = np.ones(self.pool_size, dtype=bool)
         # the plan's α-set (invertibility-searched, possibly re-seeded)
         # extended with validated spare points — one evaluation grid for
@@ -82,6 +108,43 @@ class ElasticPool:
     # ------------------------------------------------------------- failures
     def fail(self, workers) -> None:
         self.alive[np.asarray(workers)] = False
+
+    def fail_devices(self, devices) -> None:
+        """Report attrition in roster *device* ids (pool-backed pools).
+
+        Devices outside the provisioned slots (never placed, not drawn as
+        spares) are dropped — they held no shares.  Without a roster this
+        falls back to slot semantics (ids already are slots)."""
+        if self.device_map is None:
+            ids = [int(d) for d in np.atleast_1d(np.asarray(devices))
+                   if int(d) < self.pool_size]
+            if ids:
+                self.fail(ids)
+            return
+        inv = {d: i for i, d in enumerate(self.device_map)}
+        slots = [inv[int(d)] for d in np.atleast_1d(np.asarray(devices))
+                 if int(d) in inv]
+        if slots:
+            self.fail(slots)
+
+    def surviving_devices(self) -> Optional[Tuple[int, ...]]:
+        """Original-roster device ids behind the still-alive provisioned
+        slots (``None`` without a roster).  The surviving capacity vector
+        for the fixed-``m`` re-tune — ids stay roster-indexed, so the
+        re-tuned spec's failure routing never re-bases."""
+        if self.pool is None:
+            return None
+        return tuple(self.device_map[i] for i in np.nonzero(self.alive)[0])
+
+    def healthy_devices(self) -> Optional[Tuple[int, ...]]:
+        """Every roster device not known dead: the alive provisioned slots
+        PLUS the never-provisioned remainder (``None`` without a roster).
+        Queued work that has not been tiled/distributed yet (the drain
+        path) is free to use all of these, not just provisioned slots."""
+        if self.pool is None:
+            return None
+        dead = {self.device_map[i] for i in np.nonzero(~self.alive)[0]}
+        return tuple(d for d in range(len(self.pool)) if d not in dead)
 
     def active_subset(self) -> np.ndarray:
         """First N alive workers (phase-2 quorum), or raise if infeasible."""
@@ -122,9 +185,19 @@ class ElasticPool:
         """
         from .autotune import retune_spec
 
-        spec = retune_spec(int(self.alive.sum()), self.z, m=self.m,
-                           field=self.field, cost=cost,
-                           schemes=(self.scheme,))
+        if self.pool is None:
+            spec = retune_spec(int(self.alive.sum()), self.z, m=self.m,
+                               field=self.field, cost=cost,
+                               schemes=(self.scheme,))
+        else:
+            # re-tune against the surviving CAPACITY VECTOR, not just the
+            # surviving count: the candidate search re-places every N on
+            # the still-alive devices of the ORIGINAL roster (ids stay
+            # stable — DESIGN.md §8)
+            spec = retune_spec(z=self.z, m=self.m, pool=self.pool,
+                               within=self.surviving_devices(),
+                               field=self.field, cost=cost,
+                               schemes=(self.scheme,))
         return None if spec is None else AGECMPCProtocol.from_spec(spec)
 
     # -------------------------------------------------------------- re-plan

@@ -100,11 +100,14 @@ class MPCEngine:
         # subset won by the cost-model search (DESIGN.md §7)
         self.cost = cost
         self._queue: List[MPCRequest] = []
+        # keyed by the serving-group identity (``proto.group_key`` — the
+        # plan key extended with placement + pool signature for
+        # heterogeneous pools; the bare plan key otherwise)
         self._pools: Dict[PlanKey, ElasticPool] = {}
         self._replans: Dict[PlanKey, AGECMPCProtocol] = {}
         self._next_rid = 0
         self.stats = {"batches": 0, "replans": 0, "retunes": 0,
-                      "masks_dropped": 0, "failed": 0}
+                      "drains": 0, "masks_dropped": 0, "failed": 0}
         self.failures: Dict[int, str] = {}
 
     # ------------------------------------------------------------- pools
@@ -117,7 +120,7 @@ class MPCEngine:
         Takes a unified ``spec`` (preferred) or the legacy kwarg blob.
         """
         proto = _resolve_proto(spec, m, s, t, z, lam, scheme, field)
-        key = proto.plan_key
+        key = proto.group_key
         pool = self._pools.get(key)
         if pool is None:
             pool = self._pools[key] = ElasticPool.from_spec(
@@ -128,9 +131,17 @@ class MPCEngine:
              s: int = None, t: int = None, z: int = None, m: int = None,
              lam: Optional[int] = None, scheme: str = "age",
              field: Field = DEFAULT_FIELD) -> None:
-        """Report worker attrition for one plan group's pool."""
-        self.pool(spec=spec, s=s, t=t, z=z, m=m, lam=lam, scheme=scheme,
-                  field=field).fail(workers)
+        """Report worker attrition for one plan group's pool.
+
+        Ids are protocol slots for pool-free specs (legacy) and roster
+        *device* ids for heterogeneous-pool specs (translated through the
+        pool's device map, DESIGN.md §8)."""
+        pool = self.pool(spec=spec, s=s, t=t, z=z, m=m, lam=lam,
+                         scheme=scheme, field=field)
+        if pool.device_map is not None:
+            pool.fail_devices(workers)
+        else:
+            pool.fail(workers)
 
     # ------------------------------------------------------------- queue
     def submit(self, a, b, *, key, spec: Optional[MPCSpec] = None,
@@ -174,7 +185,7 @@ class MPCEngine:
         for _ in range(len(self._pools) + 2):  # escalation chains are short
             replanned = self._replans.get(key)
             if replanned is not None:
-                key, proto = replanned.plan_key, replanned
+                key, proto = replanned.group_key, replanned
                 continue
             pool = self._pools.get(key)
             if pool is None or pool.alive.sum() >= proto.n_workers:
@@ -191,6 +202,52 @@ class MPCEngine:
             self._replans[key] = new
             self.stats["replans"] += 1
         raise RuntimeError("replan escalation did not converge")
+
+    def drain_spec(self, spec: MPCSpec, shape, *, batch: int = 1,
+                   cost=None, tile_budget=None) -> Optional[MPCSpec]:
+        """Free re-tune for *queued* work after attrition (ROADMAP
+        "Autotuned re-tiling on replan"), or ``None``.
+
+        The fixed-``m`` re-tune (:meth:`_serving_proto` escalation) serves
+        blocks that are already tiled; work that has NOT been tiled yet is
+        free to change the block side too — and, unlike in-flight shares,
+        it can be placed on ANY healthy roster device, not only the
+        provisioned slots.  When this group's pool is below N, re-solve
+        the full optimization layer for the survivors — every healthy
+        device of the original roster when the spec carries a
+        :class:`~repro.mpc.workers.WorkerPool` (ids stay roster-indexed,
+        so failure routing never re-bases) — against the queued workload's
+        shape, unrestricted ``m``.  Returns the tuned spec only when it
+        prefers a *different* block side (``stats["drains"]``); the
+        session then drains the in-flight group and re-tiles its queue at
+        the new optimum.
+        """
+        from .autotune import tune as _tune
+
+        if spec.m is None:
+            return None
+        proto = AGECMPCProtocol.from_spec(spec)
+        pool = self._pools.get(proto.group_key)
+        if pool is None or int(pool.alive.sum()) >= proto.n_workers:
+            return None
+        cm = self.cost if cost is None else cost
+        kw = dict(cost=cm, schemes=(spec.scheme,), field=spec.field,
+                  batch=batch)
+        if tile_budget is not None:
+            kw["tile_budget"] = int(tile_budget)
+        try:
+            if spec.pool is not None:
+                res = _tune(z=spec.z, shape=shape, pool=spec.pool,
+                            within=pool.healthy_devices(), **kw)
+            else:
+                res = _tune(int(pool.alive.sum()), spec.z, shape, **kw)
+        except ValueError:  # nothing fits the survivors: escalation will
+            return None     # handle (or fail) the already-tiled path
+        new = res.spec
+        if new.m == spec.m:
+            return None
+        self.stats["drains"] += 1
+        return new
 
     def _fail_request(self, req: MPCRequest, reason: str) -> None:
         self.failures[req.rid] = reason
@@ -214,7 +271,7 @@ class MPCEngine:
         queue, self._queue = self._queue, []
         groups: "OrderedDict[PlanKey, List[MPCRequest]]" = OrderedDict()
         for req in queue:
-            groups.setdefault(req.proto.plan_key, []).append(req)
+            groups.setdefault(req.proto.group_key, []).append(req)
         results: Dict[int, np.ndarray] = {}
         self.failures = {}
         for key, reqs in groups.items():
@@ -224,7 +281,7 @@ class MPCEngine:
                 for req in reqs:
                     self._fail_request(req, str(e))
                 continue
-            replanned = serving.plan_key != key
+            replanned = serving.group_key != key
             for lo in range(0, len(reqs), self.max_batch):
                 self._flush_batch(serving, replanned,
                                   reqs[lo:lo + self.max_batch], results)
@@ -237,7 +294,7 @@ class MPCEngine:
         stages = plan.stages()
         n = proto.n_workers
         # pool attrition among the first N folds into every request's mask
-        pool = self._pools.get(proto.plan_key)
+        pool = self._pools.get(proto.group_key)
         pool_mask = (pool.alive[:n] if pool is not None
                      else np.ones(n, bool))
         # pad to the next power of two with repeats of the last request so

@@ -66,7 +66,13 @@ from .lagrange import (
     vandermonde_ref,
 )
 
-PlanKey = Tuple[str, int, int, int, Optional[int], int, int]
+# (scheme, s, t, z, lam, p, m) — plus, for heterogeneous-pool specs, one
+# trailing evaluation-point placement tuple (DESIGN.md §8).  Placement
+# permutes which physical device serves which worker slot; it never changes
+# the tables or compiled programs, so a placement-qualified key ALIASES the
+# placement-free plan in the cache (one build, one jit set) while keeping
+# placement-distinct groups distinct in every plan_key-keyed map.
+PlanKey = Tuple
 
 # per-plan LRU capacity for survivor decode tables / quorum weights; each
 # entry is a small int64 matrix (≤ N×N), so the cap bounds memory while
@@ -532,16 +538,29 @@ _MISSES = 0
 
 
 def get_plan(scheme: str, s: int, t: int, z: int, lam: Optional[int],
-             field: Field, m: int) -> ProtocolPlan:
-    """Memoized :func:`build_plan` — the entry point protocols use."""
+             field: Field, m: int, *,
+             placement: Optional[Tuple[int, ...]] = None) -> ProtocolPlan:
+    """Memoized :func:`build_plan` — the entry point protocols use.
+
+    ``placement`` (heterogeneous pools, DESIGN.md §8) qualifies the cache
+    key without changing what is built: the returned plan IS the
+    placement-free plan object (tables and compiled stages are
+    placement-independent), registered under the qualified key so
+    ``plan_key``-keyed maps keep placement-distinct groups apart.
+    """
     global _HITS, _MISSES
     key: PlanKey = (scheme, s, t, z, lam, field.p, m)
+    if placement is not None:
+        key = key + (tuple(int(d) for d in placement),)
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:
             _HITS += 1
             return plan
-    built = build_plan(scheme, s, t, z, lam, field, m)
+    if placement is None:
+        built = build_plan(scheme, s, t, z, lam, field, m)
+    else:  # alias the shared placement-free plan (one build, one jit set)
+        built = get_plan(scheme, s, t, z, lam, field, m)
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:  # lost a benign build race: keep the first

@@ -72,6 +72,12 @@ class AGECMPCProtocol:
     lam: Optional[int] = None
     scheme: str = "age"
     field: Field = DEFAULT_FIELD
+    # heterogeneous-pool identity (DESIGN.md §8): the device roster and the
+    # evaluation-point placement (roster device id per worker slot).  Both
+    # are carried for grouping/attrition-routing only — the phase math and
+    # the plan tables are placement-independent.
+    pool: Optional[object] = None          # repro.mpc.workers.WorkerPool
+    placement: Optional[tuple] = None
 
     def __post_init__(self):
         if self.m % self.s or self.m % self.t:
@@ -84,18 +90,27 @@ class AGECMPCProtocol:
         """A protocol instance for one :class:`~repro.mpc.api.MPCSpec`
         at block side ``m`` (defaults to ``spec.m``)."""
         return cls(s=spec.s, t=spec.t, z=spec.z, m=spec._block(m),
-                   lam=spec.lam, scheme=spec.scheme, field=spec.field)
+                   lam=spec.lam, scheme=spec.scheme, field=spec.field,
+                   pool=spec.pool, placement=spec.effective_placement)
 
     @cached_property
     def spec(self) -> MPCSpec:
         """This instance's parameterization as the unified spec object."""
         return MPCSpec(s=self.s, t=self.t, z=self.z, lam=self.lam,
-                       scheme=self.scheme, field=self.field, m=self.m)
+                       scheme=self.scheme, field=self.field, m=self.m,
+                       pool=self.pool, placement=self.placement)
 
     @property
     def plan_key(self) -> PlanKey:
         """The process-wide planner-cache key (via the spec)."""
         return self.spec.plan_key()
+
+    @property
+    def group_key(self):
+        """Serving-group identity: plan key + pool signature (the
+        ``(plan_key, pool_key)`` grouping of DESIGN.md §8; equals the bare
+        plan key for pool-free specs)."""
+        return self.spec.group_key()
 
     # ------------------------------------------------------------------ plan
     @cached_property

@@ -131,8 +131,8 @@ def block_candidates(s: int, t: int, r: int, k: int, c: int, *,
 
 def best_block(s: int, t: int, z: int, n_workers: int,
                r: int, k: int, c: int, *, cost, batch: int = 1,
-               budget: int = DEFAULT_TILE_BUDGET
-               ) -> Tuple[int, int, bool, float]:
+               budget: int = DEFAULT_TILE_BUDGET,
+               pool=None, placement=None) -> Tuple[int, int, bool, float]:
     """The best-ranked ``(m, blocks, over_budget, score)`` of
     :func:`block_candidates` under one cost model.
 
@@ -143,11 +143,17 @@ def best_block(s: int, t: int, z: int, n_workers: int,
     ``cost.total(m, s, t, z, N, blocks)``, then the coarser side.  One
     helper so a tuned spec's baked-in ``m`` and a ``cost=`` session's
     block choice can never drift apart.
+
+    ``pool``/``placement`` (a :class:`repro.mpc.workers.WorkerPool` + the
+    device assignment) switch the score to the per-worker-weighted form;
+    they are only forwarded when given, so duck-typed cost objects that
+    predate the pool keyword keep working.
     """
+    pw = {} if pool is None else {"pool": pool, "placement": placement}
     best = None
     for m, blocks, over in block_candidates(s, t, r, k, c, batch=batch,
                                             budget=budget):
-        sc = cost.total(m, s, t, z, n_workers, blocks)
+        sc = cost.total(m, s, t, z, n_workers, blocks, **pw)
         key = (over, blocks if over else 0, sc, -m)
         if best is None or key < best[0]:
             best = (key, (m, blocks, over, sc))
@@ -156,7 +162,8 @@ def best_block(s: int, t: int, z: int, n_workers: int,
 
 def choose_block_cost(s: int, t: int, z: int, n_workers: int,
                       r: int, k: int, c: int, *, cost, batch: int = 1,
-                      budget: int = DEFAULT_TILE_BUDGET) -> int:
+                      budget: int = DEFAULT_TILE_BUDGET,
+                      pool=None, placement=None) -> int:
     """Cost-model-aware :func:`choose_block` (DESIGN.md §7).
 
     Picks the :func:`best_block` side; when no side fits the budget the
@@ -176,7 +183,8 @@ def choose_block_cost(s: int, t: int, z: int, n_workers: int,
     argument keeps this module free of an autotune import cycle.
     """
     m, blocks, _, _ = best_block(s, t, z, n_workers, r, k, c, cost=cost,
-                                 batch=batch, budget=budget)
+                                 batch=batch, budget=budget, pool=pool,
+                                 placement=placement)
     _check_budget(m, blocks, budget, (r, k, c), batch)
     return m
 

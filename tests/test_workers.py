@@ -1,0 +1,536 @@
+"""Heterogeneous worker pools (DESIGN.md §8): the worker model itself,
+homogeneous-pool ≡ legacy int-N equivalence (ranking + bit-exactness),
+placement-permutation decode correctness under survivor masks, skewed-pool
+spare preference, surviving-capacity re-tune, the replan drain/re-tile
+path, measured cost-model calibration and the sharded dispatch weight."""
+import itertools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.mpc import (
+    CostModel,
+    MPCSpec,
+    WorkerClass,
+    WorkerPool,
+    connect,
+    tune,
+)
+from repro.mpc.autotune import DEFAULT_COST, retune_spec, search
+from repro.mpc.elastic import ElasticPool
+from repro.mpc.engine import MPCEngine
+from repro.mpc.field import DEFAULT_FIELD, Field, P_MERSENNE31
+from repro.mpc.workers import GENERIC, modeled_makespan
+
+FAST = WorkerClass("gateway", compute=1.0, storage=1.0, link=1.0)
+MID = WorkerClass("laptop", compute=3.0, storage=2.0, link=4.0)
+SLOW = WorkerClass("phone", compute=10.0, storage=8.0, link=25.0)
+
+FIELDS = (DEFAULT_FIELD, Field(P_MERSENNE31))
+
+
+def exact_ref(a, b, p):
+    """Session semantics: ``a @ b`` mod p."""
+    return np.array((a.astype(object) @ b.astype(object)) % p, np.int64)
+
+
+def exact_ref_t(a, b, p):
+    """Direct-engine semantics: ``Aᵀ B`` mod p."""
+    return np.array((a.astype(object).T @ b.astype(object)) % p, np.int64)
+
+
+# ================================================================ the model
+class TestWorkerModel:
+    def test_class_validation(self):
+        with pytest.raises(ValueError, match="compute"):
+            WorkerClass("bad", compute=0.0)
+        with pytest.raises(ValueError, match="link"):
+            WorkerClass("bad", link=-1.0)
+
+    def test_pool_builders_and_protocol(self):
+        pool = WorkerPool.of((FAST, 2), (SLOW, 3))
+        assert len(pool) == 5 and pool[0] is FAST and pool[4] is SLOW
+        assert not pool.is_homogeneous
+        assert WorkerPool.homogeneous(4).is_homogeneous
+        assert pool.describe() == "2×gateway + 3×phone"
+        with pytest.raises(ValueError, match="at least one"):
+            WorkerPool(workers=())
+        with pytest.raises(TypeError, match="WorkerClass"):
+            WorkerPool(workers=("phone",))
+
+    def test_homogeneous_place_is_identity_prefix(self):
+        pool = WorkerPool.homogeneous(9)
+        assert pool.place(5) == (0, 1, 2, 3, 4)
+        assert pool.bottleneck(pool.place(5)) == (1.0, 1.0, 1.0)
+
+    def test_skewed_place_prefers_high_capacity(self):
+        pool = WorkerPool.of((SLOW, 4), (FAST, 3), (MID, 2))
+        # fast devices (ids 4..6) first, then mid (7, 8), then slow
+        assert pool.place(5) == (4, 5, 6, 7, 8)
+        assert pool.place(6) == (4, 5, 6, 7, 8, 0)
+        assert pool.bottleneck((4, 5)) == (1.0, 1.0, 1.0)
+        assert pool.bottleneck((4, 0)) == (10.0, 8.0, 25.0)
+
+    def test_place_within_and_validation(self):
+        pool = WorkerPool.of((SLOW, 3), (FAST, 3))
+        assert pool.place(2, within=[0, 1, 5]) == (5, 0)
+        with pytest.raises(ValueError, match="cannot place"):
+            pool.place(7)
+        with pytest.raises(ValueError, match="outside pool"):
+            pool.place(1, within=[99])
+
+    def test_spares_ordered_high_capacity_first(self):
+        pool = WorkerPool.of((SLOW, 3), (FAST, 2), (MID, 2))
+        placed = (3, 4)  # the two gateways
+        assert pool.spares_for(placed) == (5, 6, 0, 1, 2)
+
+    def test_weights_steer_composite_cost(self):
+        link_heavy = WorkerClass("relay", compute=1.0, storage=1.0, link=50.0)
+        cpu_heavy = WorkerClass("brick", compute=50.0, storage=1.0, link=1.0)
+        pool = WorkerPool.of((link_heavy, 1), (cpu_heavy, 1))
+        comm = CostModel(computation=0.0, storage=0.0, communication=1.0)
+        comp = CostModel(computation=1.0, storage=0.0, communication=0.0)
+        assert pool.place(1, comm) == (1,)  # avoid the slow link
+        assert pool.place(1, comp) == (0,)  # avoid the slow CPU
+
+
+# ============================================= homogeneous ≡ legacy int-N
+@pytest.mark.parametrize("field", FIELDS, ids=("p26", "m31"))
+def test_homogeneous_pool_ranking_matches_int_n(field):
+    """Acceptance: ``tune(pool=homogeneous)`` ranks identically to the
+    int-N API — same candidates, same scores, same winner — across the
+    scheme family."""
+    shape = (24, 24, 24)
+    legacy = tune(20, 2, shape, field=field)
+    pooled = tune(pool=WorkerPool.homogeneous(20), z=2, shape=shape,
+                  field=field)
+    strip = lambda c: (c.scheme, c.s, c.t, c.lam, c.n_workers, c.m,  # noqa: E731
+                       c.n_blocks, c.over_budget, c.score)
+    assert [strip(c) for c in legacy.candidates] == \
+        [strip(c) for c in pooled.candidates]
+    for f in ("scheme", "s", "t", "z", "lam", "m"):
+        assert getattr(pooled.spec, f) == getattr(legacy.spec, f)
+    assert pooled.spec.placement == tuple(range(pooled.spec.n_workers))
+
+
+@pytest.mark.parametrize(
+    "scheme,s,t,field",
+    [(sch, s, t, f) for (sch, (s, t)), f in itertools.product(
+        [("age", (2, 2)), ("entangled", (2, 2)), ("polydot", (3, 2))],
+        FIELDS)],
+    ids=lambda v: str(getattr(v, "p", v)))
+def test_homogeneous_pool_bit_exact_vs_int_n(scheme, s, t, field):
+    """Acceptance sweep: a homogeneous-pool session decodes bit-identically
+    to the legacy spec path for every scheme × both primes."""
+    m = 2 * s * t
+    spec = MPCSpec(s=s, t=t, z=2, scheme=scheme, field=field, m=m)
+    pooled = spec.replace(pool=WorkerPool.homogeneous(spec.n_workers))
+    p = field.p
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, p, (m, m))
+    b = rng.integers(0, p, (m, m))
+    key = jax.random.PRNGKey(5)
+    y_int = np.asarray(connect(spec).matmul(a, b, encoded=True, key=key))
+    y_pool = np.asarray(connect(pooled).matmul(a, b, encoded=True, key=key))
+    np.testing.assert_array_equal(y_int, y_pool)
+    np.testing.assert_array_equal(y_int, exact_ref(a, b, p))
+
+
+def test_pool_plan_aliases_placement_free_plan():
+    """Placement qualifies the plan key but aliases the same plan object —
+    one table build, one jit set, distinct grouping identity."""
+    base = MPCSpec(s=2, t=2, z=2, m=8)
+    pooled = base.replace(pool=WorkerPool.homogeneous(base.n_workers + 3),
+                          placement=tuple(range(1, base.n_workers + 1)))
+    assert pooled.plan() is base.plan()
+    assert pooled.plan_key() != base.plan_key()
+    assert pooled.plan_key()[:7] == base.plan_key()
+    assert pooled.group_key() != pooled.plan_key()  # + pool signature
+    assert base.group_key() == base.plan_key()      # legacy identity
+
+
+def test_spec_pool_validation():
+    pool = WorkerPool.of((FAST, 3), (SLOW, 3))
+    with pytest.raises(ValueError, match="placement requires a pool"):
+        MPCSpec(s=2, t=2, z=2, placement=(0, 1))
+    with pytest.raises(ValueError, match="distinct device ids"):
+        MPCSpec(s=2, t=2, z=2, pool=pool, placement=(0, 0))
+    with pytest.raises(ValueError, match="distinct device ids"):
+        MPCSpec(s=2, t=2, z=2, pool=pool, placement=(0, 99))
+    with pytest.raises(TypeError, match="WorkerPool"):
+        MPCSpec(s=2, t=2, z=2, pool="phones")
+    # pool smaller than N fails when the placement is resolved
+    small = MPCSpec(s=2, t=2, z=2, m=8, pool=pool)  # N=17 > 6 devices
+    with pytest.raises(ValueError, match="devices < N"):
+        small.effective_placement
+
+
+# ==================================== placement-permutation decode paths
+@pytest.mark.parametrize("field", FIELDS, ids=("p26", "m31"))
+def test_placement_permutation_decode_under_survivor_masks(field):
+    """Acceptance: a skewed pool with a non-identity placement decodes
+    exactly under random survivor masks (masks are slot-indexed; the
+    permutation routes devices, never the math)."""
+    pool = WorkerPool.of((SLOW, 12), (FAST, 8))
+    res = tune(pool=pool, z=2, shape=(8, 8, 8), field=field,
+               schemes=("age",))
+    spec = res.spec
+    assert spec.placement is not None
+    assert spec.placement != tuple(range(spec.n_workers))  # non-identity
+    # high-capacity devices land on the heavy low slots (decode quorum)
+    quorum = spec.placement[: spec.recovery_threshold]
+    assert all(pool[d] is FAST for d in quorum
+               if spec.recovery_threshold <= 8)
+    sess = connect(spec)
+    p = field.p
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    want = exact_ref(a, b, p)
+    n, t2z = spec.n_workers, spec.recovery_threshold
+    for trial in range(4):
+        mask = np.zeros(n, bool)
+        keep = rng.choice(n, rng.integers(t2z, n + 1), replace=False)
+        mask[keep] = True
+        y = np.asarray(sess.matmul(a, b, encoded=True, survivors=mask,
+                                   key=jax.random.PRNGKey(trial)))
+        np.testing.assert_array_equal(y, want)
+
+
+def test_session_fail_takes_device_ids_with_pool():
+    """With a pool spec, ``session.fail`` ids are roster device ids:
+    placed devices translate to slots, unplaced devices are no-ops."""
+    pool = WorkerPool.of((SLOW, 5), (FAST, 10))
+    spec = MPCSpec(s=2, t=1, z=2, m=8, pool=pool)     # N=7
+    spec = spec.replace(placement=pool.place(spec.n_workers))
+    assert spec.placement == tuple(range(5, 12))
+    sess = connect(spec)
+    # device 5 is slot 0; devices 0..4 (slow, unplaced) have no slot
+    assert spec.slots_for([5, 11, 0]) == (0, 6)
+    p = spec.field.p
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    sess.fail([5, 0])          # kill slot 0 (+ an unplaced bystander)
+    key = jax.random.PRNGKey(9)
+    y = np.asarray(sess.matmul(a, b, encoded=True, key=key))
+    np.testing.assert_array_equal(y, exact_ref(a, b, p))
+    # identical to running the protocol with slot 0 masked out
+    mask = np.ones(spec.n_workers, bool)
+    mask[0] = False
+    direct = spec.protocol().run(np.asarray(a).T, b, key, survivors=mask)
+    np.testing.assert_array_equal(y, np.asarray(direct))
+
+
+def test_engine_groups_split_by_placement_and_pool():
+    """Same (s,t,z,m): different placements / pools are different serving
+    groups; the legacy int-N spec keeps its bare plan-key group."""
+    pool = WorkerPool.of((FAST, 10), (SLOW, 10))
+    base = MPCSpec(s=2, t=1, z=2, m=8)
+    n = base.n_workers
+    sp_a = base.replace(pool=pool, placement=tuple(range(n)))
+    sp_b = base.replace(pool=pool, placement=tuple(range(10, 10 + n)))
+    assert len({base.group_key(), sp_a.group_key(), sp_b.group_key()}) == 3
+    eng = MPCEngine(max_batch=8)
+    p = base.field.p
+    rng = np.random.default_rng(5)
+    rids = {}
+    for i, spec in enumerate((base, sp_a, sp_b)):
+        a = rng.integers(0, p, (8, 8))
+        b = rng.integers(0, p, (8, 8))
+        rid = eng.submit(a, b, key=jax.random.PRNGKey(i), spec=spec)
+        rids[rid] = exact_ref_t(a, b, p)
+    results = eng.flush()
+    assert eng.stats["batches"] == 3  # one vmapped dispatch per group
+    for rid, want in rids.items():
+        np.testing.assert_array_equal(np.asarray(results[rid]), want)
+
+
+# =========================================== spares + surviving-capacity
+def test_elastic_spares_prefer_high_capacity_regression():
+    """Acceptance (spare preference): on a skewed roster the spare slots
+    are the highest-capacity *unplaced* devices, in capacity order."""
+    pool = WorkerPool.of((SLOW, 6), (FAST, 9), (MID, 4))
+    spec = MPCSpec(s=2, t=1, z=2, m=8, pool=pool)       # N=7
+    spec = spec.replace(placement=pool.place(spec.n_workers))
+    assert spec.placement == (6, 7, 8, 9, 10, 11, 12)   # gateways
+    ep = ElasticPool.from_spec(spec, spares=4)
+    # remaining gateways (13, 14) first, then laptops (15, 16); phones last
+    assert ep.device_map[spec.n_workers:] == (13, 14, 15, 16)
+    assert ep.pool_size == spec.n_workers + 4
+    # spare inventory clamps to what the roster has left
+    tight = WorkerPool.of((FAST, 8))
+    tspec = MPCSpec(s=2, t=1, z=2, m=8, pool=tight)
+    tp = ElasticPool.from_spec(tspec.replace(
+        placement=tight.place(tspec.n_workers)), spares=5)
+    assert tp.pool_size == tspec.n_workers + 1          # only 1 device left
+
+
+def test_retune_uses_surviving_capacity_vector():
+    """Re-tune sees WHICH devices survived, not just how many: killing the
+    fast half forces the re-tuned placement onto the surviving devices —
+    with ids still indexing the ORIGINAL roster (no re-basing, so failure
+    routing stays valid after the re-tune)."""
+    pool = WorkerPool.of((FAST, 10), (SLOW, 12))
+    spec = MPCSpec(s=2, t=2, z=2, m=8, pool=pool)       # N=17
+    spec = spec.replace(placement=pool.place(spec.n_workers))
+    ep = ElasticPool.from_spec(spec, spares=2)
+    ep.fail_devices(list(range(10)))                    # all gateways die
+    surv = ep.surviving_devices()
+    assert all(pool[d].name == "phone" for d in surv)
+    new = ep.retune()
+    assert new is not None and new.n_workers <= len(surv)
+    assert new.spec.pool == pool                        # original roster
+    assert set(new.spec.placement) <= set(surv)         # survivors only
+    assert all(pool[d].name == "phone" for d in new.spec.placement)
+    # and the engine serves exactly under the re-tuned pool spec
+    eng = MPCEngine(spares=2, max_batch=4)
+    p = spec.field.p
+    rng = np.random.default_rng(13)
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    eng.fail(list(range(10)), spec=spec)                # device ids
+    rid = eng.submit(a, b, key=jax.random.PRNGKey(2), spec=spec)
+    y = eng.flush()[rid]
+    np.testing.assert_array_equal(np.asarray(y), exact_ref_t(a, b, p))
+    assert eng.stats["retunes"] == 1
+
+
+def test_drain_pool_spec_uses_healthy_unplaced_devices():
+    """The drain re-tune places queued (undistributed) work on EVERY
+    healthy roster device — including never-provisioned ones the fixed-m
+    re-tune cannot reach — and keeps original device ids, so post-drain
+    ``fail`` calls still route correctly."""
+    pool = WorkerPool.of((FAST, 18), (SLOW, 6))
+    spec = MPCSpec(s=2, t=2, z=2, m=12, pool=pool)      # N=17 gateways
+    spec = spec.replace(placement=pool.place(spec.n_workers))
+    sess = connect(spec, backend="batched", spares=1)
+    p = spec.field.p
+    rng = np.random.default_rng(41)
+    a = rng.integers(0, p, (12, 12))
+    b = rng.integers(0, p, (12, 12))
+    rid = sess.submit(a, b, key=jax.random.PRNGKey(0), encoded=True)
+    # kill 12 placed gateways: only 6 provisioned slots survive — BELOW
+    # the z=2 family minimum (N=7), so a survivors-only re-tune finds
+    # nothing — while 12 roster devices stay healthy (6 gateways + 6
+    # never-provisioned phones)
+    dead = list(spec.placement[:12])
+    sess.fail(dead)
+    results = sess.flush()
+    assert sess.stats["retiles"] == 1
+    adopted = sess.spec
+    assert adopted.pool == pool                         # same roster
+    assert not set(adopted.placement) & set(dead)       # avoids the dead
+    # the placement reaches a never-provisioned phone: queued work is not
+    # bound to the provisioned slots
+    assert any(pool[d].name == "phone" for d in adopted.placement)
+    np.testing.assert_array_equal(np.asarray(results[rid]),
+                                  exact_ref(a, b, p))
+    # original-roster ids still route after the drain: kill one adopted
+    # device, serve exact through coded tolerance
+    sess.fail([adopted.placement[-1]])
+    y = np.asarray(sess.matmul(a, b, encoded=True))
+    np.testing.assert_array_equal(y, exact_ref(a, b, p))
+
+
+def test_retune_spec_pool_scores_per_worker_weighted():
+    """With explicit weights, the pool-aware re-tune ranks by the
+    bottleneck-scaled objective (sanity: homogeneous pool == int-N)."""
+    hom = retune_spec(z=2, m=8, pool=WorkerPool.homogeneous(8))
+    legacy = retune_spec(8, 2, m=8)
+    assert (hom.s, hom.t, hom.lam, hom.scheme) == \
+        (legacy.s, legacy.t, legacy.lam, legacy.scheme)
+    assert hom.placement == tuple(range(hom.n_workers))
+
+
+# ======================================================== replan drain
+def test_drain_retiles_queued_requests_at_new_optimum():
+    """Acceptance (ROADMAP re-tiling): attrition whose free re-tune wants
+    a different block side drains the group — queued requests re-tile at
+    the new optimum instead of pinning to the old m — and stays exact."""
+    spec = MPCSpec(s=2, t=2, z=2, m=12)                 # N=17
+    sess = connect(spec, backend="batched", spares=1)
+    p = spec.field.p
+    rng = np.random.default_rng(17)
+    reqs = {}
+    for i in range(3):
+        a = rng.integers(0, p, (12, 12))
+        b = rng.integers(0, p, (12, 12))
+        rid = sess.submit(a, b, key=jax.random.PRNGKey(i), encoded=True)
+        reqs[rid] = exact_ref(a, b, p)
+    sess.fail(list(range(spec.n_workers + 1 - 8)))      # 8 of 18 alive
+    results = sess.flush()
+    assert sess.stats["retiles"] == 1
+    assert sess.backend.engine.stats["drains"] == 1
+    assert sess.spec.m != 12                            # re-tiled
+    assert sess.spec.n_workers <= 8
+    for rid, want in reqs.items():
+        np.testing.assert_array_equal(np.asarray(results[rid]), want)
+    # follow-up traffic keeps the adopted spec, no further drain
+    a = rng.integers(0, p, (12, 12))
+    b = rng.integers(0, p, (12, 12))
+    y = np.asarray(sess.matmul(a, b, encoded=True))
+    np.testing.assert_array_equal(y, exact_ref(a, b, p))
+    assert sess.stats["retiles"] == 1
+
+
+def test_drain_not_triggered_when_m_already_optimal():
+    """When the free re-tune lands on the same block side, the session
+    pins m and the engine escalates through the fixed-m path as before."""
+    spec = MPCSpec(s=2, t=2, z=2, m=16)                 # lcm-reachable m
+    sess = connect(spec, backend="batched", spares=1)
+    p = spec.field.p
+    rng = np.random.default_rng(19)
+    a = rng.integers(0, p, (16, 16))
+    b = rng.integers(0, p, (16, 16))
+    rid = sess.submit(a, b, key=jax.random.PRNGKey(0), encoded=True)
+    sess.fail(list(range(spec.n_workers + 1 - 8)))
+    results = sess.flush()
+    assert sess.stats["retiles"] == 0
+    assert sess.spec.m == 16
+    assert sess.backend.engine.stats["retunes"] == 1    # fixed-m path
+    np.testing.assert_array_equal(np.asarray(results[rid]),
+                                  exact_ref(a, b, p))
+
+
+def test_drain_keeps_pinned_m_requests_untouched():
+    """A queued request with an explicit per-call m override is the
+    caller's choice: the drain rebuilds only adapter-tiled requests."""
+    spec = MPCSpec(s=2, t=2, z=2, m=12)
+    sess = connect(spec, backend="batched", spares=1)
+    p = spec.field.p
+    rng = np.random.default_rng(23)
+    a = rng.integers(0, p, (12, 12))
+    b = rng.integers(0, p, (12, 12))
+    rid_auto = sess.submit(a, b, key=jax.random.PRNGKey(0), encoded=True)
+    rid_pinned = sess.submit(a, b, key=jax.random.PRNGKey(1), encoded=True,
+                             m=12)
+    sess.fail(list(range(spec.n_workers + 1 - 8)))
+    results = sess.flush()
+    assert sess.stats["retiles"] == 1
+    want = exact_ref(a, b, p)
+    np.testing.assert_array_equal(np.asarray(results[rid_auto]), want)
+    # the pinned request rides the engine's fixed-m retune escalation
+    np.testing.assert_array_equal(np.asarray(results[rid_pinned]), want)
+
+
+# ===================================================== measured cost model
+class TestCostModelFromBench:
+    def _write(self, path, rows):
+        runs = [{"utc": "2026-01-01T00:00:00Z", "entries": [
+            {"name": f"cmpc_age_m{i}", "fused_us": us,
+             "baseline_us": us * 2, "speedup": 2.0,
+             "derived": f"N=17;xi={xi:.6e};sigma={sg:.6e};zeta={zt:.6e}"}
+            for i, (xi, sg, zt, us) in enumerate(rows)]}]
+        path.write_text(json.dumps(runs))
+
+    def test_recovers_planted_weights(self, tmp_path):
+        f = tmp_path / "BENCH_PROTOCOL.json"
+        rng = np.random.default_rng(0)
+        rows = []
+        for _ in range(12):
+            xi, sg, zt = rng.uniform(1e4, 1e6, 3)
+            rows.append((xi, sg, zt, 2.0 * xi + 0.25 * sg + 0.5 * zt))
+        self._write(f, rows)
+        cm = CostModel.from_bench(str(f))
+        assert cm.computation == pytest.approx(2.0, rel=1e-3)
+        assert cm.storage == pytest.approx(0.25, rel=1e-3)
+        assert cm.communication == pytest.approx(0.5, rel=1e-3)
+
+    def test_negative_directions_clamped_not_fit(self, tmp_path):
+        """A trajectory that would fit a negative weight clamps it to 0
+        and refits the rest (deterministic active-set)."""
+        f = tmp_path / "BENCH_PROTOCOL.json"
+        rng = np.random.default_rng(1)
+        rows = []
+        for _ in range(12):
+            xi, sg, zt = rng.uniform(1e4, 1e6, 3)
+            rows.append((xi, sg, zt, max(3.0 * xi - 0.5 * sg, 1.0)))
+        self._write(f, rows)
+        cm = CostModel.from_bench(str(f))
+        assert cm.storage == 0.0
+        assert cm.computation > 0.0
+
+    def test_missing_or_malformed_falls_back_to_paper_weights(self, tmp_path):
+        assert CostModel.from_bench(str(tmp_path / "nope.json")) == CostModel()
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert CostModel.from_bench(str(bad)) == CostModel()
+        empty = tmp_path / "empty.json"
+        empty.write_text("[]")
+        assert CostModel.from_bench(str(empty)) == CostModel()
+        assert CostModel.from_bench(
+            str(empty), dispatch=3.0) == CostModel(dispatch=3.0)
+
+    def test_real_trajectory_yields_usable_weights(self):
+        """The repo's own trajectory calibrates to finite non-negative
+        µs/scalar weights that rank a tune() search."""
+        import os
+
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_PROTOCOL.json")
+        if not os.path.exists(path):
+            pytest.skip("no trajectory in this checkout")
+        cm = CostModel.from_bench(path)
+        assert min(cm.computation, cm.storage, cm.communication) >= 0.0
+        res = tune(17, 2, (32, 32, 32), cost=cm)
+        assert res.best.n_workers <= 17
+
+
+# ======================================================= sharded dispatch
+class TestShardedDispatch:
+    def test_with_dispatch_scale(self):
+        cm = CostModel(dispatch=2.0)
+        assert cm.with_dispatch_scale(3.0).dispatch == 6.0
+        assert cm.with_dispatch_scale(1.0) is cm
+        assert cm.with_dispatch_scale(3.0).computation == cm.computation
+
+    def test_mesh_shape_aware_scale_and_block_choice(self):
+        """ceil(N/axis) waves scale the dispatch term: on a 1-device mesh
+        the sharded session coarsens its tiling vs the local session."""
+        mesh = jax.make_mesh((1,), ("model",))
+        spec = MPCSpec(s=2, t=2, z=2)                   # N=17
+        cm = CostModel(dispatch=5e5)
+        sh = connect(spec, backend="sharded", mesh=mesh, cost=cm)
+        assert sh.backend.dispatch_scale(spec) == float(spec.n_workers)
+        lo = connect(spec, cost=cm)
+        assert lo.backend.dispatch_scale(spec) == 1.0
+        p = spec.field.p
+        rng = np.random.default_rng(29)
+        a = rng.integers(0, p, (8, 64))
+        b = rng.integers(0, p, (64, 8))
+        want = exact_ref(a, b, p)
+        y_sh = np.asarray(sh.matmul(a, b, encoded=True))
+        y_lo = np.asarray(lo.matmul(a, b, encoded=True))
+        np.testing.assert_array_equal(y_sh, want)
+        np.testing.assert_array_equal(y_lo, want)
+        # the mesh-aware session dispatched no more blocks than the local
+        # one, and fewer when the scaled dispatch term bites
+        assert sh.stats["blocks"] <= lo.stats["blocks"]
+
+
+# ========================================================= makespan model
+def test_modeled_makespan_placement_beats_oblivious():
+    """The per-slot makespan model shows the tuner's placement strictly
+    beating capacity-oblivious identity placement on a skewed pool — the
+    hetero_tune_* bench-pair metric."""
+    pool = WorkerPool.of((SLOW, 12), (FAST, 8))
+    res = tune(pool=pool, z=2, shape=(48, 48, 48), schemes=("age",))
+    spec = res.spec
+    cm = DEFAULT_COST
+    placed = modeled_makespan(spec.m, spec.s, spec.t, spec.z,
+                              spec.n_workers, cm, pool,
+                              spec.effective_placement)
+    oblivious = modeled_makespan(spec.m, spec.s, spec.t, spec.z,
+                                 spec.n_workers, cm, pool,
+                                 tuple(range(spec.n_workers)))
+    assert placed < oblivious
+    # homogeneous pools: placement cannot matter
+    hom = WorkerPool.homogeneous(spec.n_workers, GENERIC)
+    a = modeled_makespan(spec.m, spec.s, spec.t, spec.z, spec.n_workers,
+                         cm, hom, tuple(range(spec.n_workers)))
+    b = modeled_makespan(spec.m, spec.s, spec.t, spec.z, spec.n_workers,
+                         cm, hom, tuple(reversed(range(spec.n_workers))))
+    assert a == b
