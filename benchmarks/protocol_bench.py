@@ -19,6 +19,11 @@ The elastic-engine refactor (DESIGN.md §5) adds two more pair families:
   plan group) vs a sequential per-request ``run`` loop, at batch sizes
   1 / 4 / 16, with requests/s in the derived column.
 
+The Byzantine layer (DESIGN.md §9) adds **verified decode** pairs:
+``byz_decode_*`` (the MAC-verified path under an active two-liar
+injector vs the unverified fused run) and ``mac_overhead_*`` (tag +
+check vs the decode stage the MACs protect).
+
 The unified session API (DESIGN.md §6) adds a **facade overhead** pair:
 ``connect(spec).matmul`` (floats in, floats out, through the shape
 adapter) vs the direct ``encode → protocol.run → decode`` pipeline on the
@@ -141,6 +146,7 @@ def main():
     autotune_pairs(records)
     hetero_pairs(records)
     sharded_pairs(records)
+    byzantine_pairs(records)
     write_trajectory("PROTOCOL", records)
 
 
@@ -270,6 +276,76 @@ def hetero_pairs(records, *, quick: bool = False):
         f"N{spec.n_workers};makespan-model;calibrated={calibrated}")
 
 
+def byzantine_pairs(records, *, quick: bool = False):
+    """Byzantine verification cost (DESIGN.md §9), two pairs:
+
+    * ``byz_decode_m*`` — the full verified path (front + MAC tagging +
+      check + honest-survivor decode, ``run_verified`` under a scripted
+      two-liar injector) vs the unverified fused ``run`` of the same
+      block: what an adversary budget costs end to end, with the
+      corruption actually exercised (outputs must stay bit-identical).
+    * ``mac_overhead_m*`` — tagging + verifying every share (two runs of
+      the staged ``tags`` program) vs the decode stage it protects: the
+      MAC check must stay a small fraction of the decode it guards.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.mpc import FaultInjector, MPCSpec
+    from repro.mpc import byzantine as byz
+
+    m = 16 if quick else 96
+    spec = MPCSpec(s=2, t=2, z=2, m=m, adversaries=2)
+    plain = AGECMPCProtocol.from_spec(
+        dataclasses.replace(spec, adversaries=0))
+    guarded = AGECMPCProtocol.from_spec(spec)
+    rng = np.random.default_rng(41)
+    p = spec.field.p
+    a = rng.integers(0, p, (m, m))
+    b = rng.integers(0, p, (m, m))
+    key = jax.random.PRNGKey(5)
+    want = np.asarray(plain.run(a, b, key))
+
+    def verified():
+        inj = FaultInjector(seed=9,
+                            schedule={0: [(3, "tamper"), (9, "flip")]})
+        return guarded.run_verified(a, b, key, injector=inj)[0]
+
+    y, verdict = guarded.run_verified(
+        a, b, key,
+        injector=FaultInjector(seed=9,
+                               schedule={0: [(3, "tamper"), (9, "flip")]}))
+    assert np.array_equal(np.asarray(y), want), "verified decode diverged"
+    assert sorted(verdict.liars) == [3, 9]
+    iters, best_of = (2, 1) if quick else (5, 3)
+    us_verified = time_us(verified, iters=iters, warmup=1, best_of=best_of)
+    us_plain = time_us(plain.run, a, b, key, iters=iters, warmup=1,
+                       best_of=best_of)
+    emit_pair(records, f"byz_decode_m{m}", us_verified, us_plain,
+              f"a=2;liars=2;N={spec.n_workers};"
+              f"quorum={spec.verified_threshold}")
+
+    stages = guarded.plan.stages()
+    i_pts = stages.front(np.asarray(a, np.int64), np.asarray(b, np.int64),
+                         key)
+    gamma, offsets, rvec = byz.mac_params(guarded.plan, key)
+    idx, rows = guarded.plan.survivor_tables(
+        tuple(range(guarded.recovery_threshold)))
+
+    def mac_check():  # tag + verify = two runs of the tags program
+        t1 = stages.tags(i_pts, gamma, offsets, rvec)
+        t2 = stages.tags(i_pts, gamma, offsets, rvec)
+        return jax.numpy.equal(t1, t2)
+
+    us_mac = time_us(mac_check, iters=iters, warmup=1, best_of=best_of)
+    us_decode = time_us(stages.decode, i_pts, idx, rows, iters=iters,
+                        warmup=1, best_of=best_of)
+    emit_pair(records, f"mac_overhead_m{m}", us_mac, us_decode,
+              f"tags[{spec.n_workers}];vs-decode-stage")
+
+
 def sharded_pairs(records, *, quick: bool = False):
     """Sharded autotune leg (ROADMAP): mesh-shape-aware dispatch weight.
 
@@ -371,6 +447,7 @@ def smoke():
     auto_records = []
     autotune_pairs(auto_records, quick=True)
     hetero_pairs(auto_records, quick=True)
+    byzantine_pairs(auto_records, quick=True)
     write_trajectory("PROTOCOL", auto_records)
 
     print(f"protocol smoke OK: fused, survivor, engine batch of {len(rids)} "

@@ -21,9 +21,18 @@ heterogeneous edge rosters first-class (DESIGN.md §8): ``tune(pool=
 WorkerPool.of((PHONE, 12), (GATEWAY, 8)), ...)`` co-optimizes which
 devices serve which evaluation points, and ``CostModel.from_bench``
 calibrates the weights from the measured trajectory.
+
+Byzantine robustness is a spec knob (DESIGN.md §9): ``MPCSpec(
+adversaries=a)`` provisions the ``t²+z+2a`` verified quorum, MAC-tags
+every share (:mod:`repro.mpc.byzantine`), localizes and evicts up to
+``a`` liars per decode through the same fail → retune → replan
+escalation as a crash, and :class:`FaultInjector` drives seeded
+corruption schedules through any verifying backend to prove it.
 """
 from .api import MPCSession, MPCSpec, connect
 from .autotune import CostModel, TuneResult, tune
+from .byzantine import FaultInjector
+from .errors import AdversaryBudgetError, MaskShapeError, QuorumError
 from .workers import WorkerClass, WorkerPool
 from .field import ACC_WINDOW, DEFAULT_FIELD, Field, P_DEFAULT, P_MERSENNE31, acc_window
 from .planner import (
@@ -38,11 +47,15 @@ from .protocol import AGECMPCProtocol
 
 __all__ = [
     "ACC_WINDOW",
+    "AdversaryBudgetError",
     "CostModel",
     "DEFAULT_FIELD",
+    "FaultInjector",
     "Field",
     "MPCSession",
     "MPCSpec",
+    "MaskShapeError",
+    "QuorumError",
     "TuneResult",
     "WorkerClass",
     "WorkerPool",

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .errors import MaskShapeError, QuorumError
 from .field import DEFAULT_FIELD, Field
 from .planner import PlanKey, ProtocolPlan, _resolve_code, get_plan
 from .tiling import (
@@ -81,6 +82,13 @@ class MPCSpec:
              ``None`` with a pool means the identity prefix (device ``n``
              serves slot ``n`` — the capacity-oblivious default; the tuner
              bakes in an optimized one).
+    adversaries : Byzantine budget ``a`` ≥ 0 (DESIGN.md §9): how many
+             workers may return *wrong* shares per round (not merely
+             vanish).  ``a > 0`` raises the serving quorum to the
+             verified threshold ``t²+z + 2a`` and routes every decode
+             through MAC verification (liars are localized, excluded and
+             evicted through the ``fail``/``retune`` path).  The code's
+             worker count must cover the verified threshold.
     """
 
     s: int
@@ -92,6 +100,7 @@ class MPCSpec:
     m: Optional[int] = None
     pool: Optional[WorkerPool] = None
     placement: Optional[Tuple[int, ...]] = None
+    adversaries: int = 0
 
     def __post_init__(self):
         if self.scheme not in SCHEMES:
@@ -121,6 +130,15 @@ class MPCSpec:
                     f"placement must be distinct device ids within the "
                     f"{len(self.pool)}-device pool, got {self.placement!r}")
             object.__setattr__(self, "placement", pl)
+        a = self.adversaries
+        if isinstance(a, bool) or not isinstance(a, (int, np.integer)) or a < 0:
+            raise ValueError(
+                f"adversaries must be an int >= 0, got {a!r}")
+        if a > 0 and self.n_workers < self.verified_threshold:
+            raise ValueError(
+                f"adversary budget a={a} needs N >= t²+z+2a = "
+                f"{self.verified_threshold} workers but the "
+                f"{self.scheme} code provides only N={self.n_workers}")
 
     # ------------------------------------------------------------ identity
     def replace(self, **kw) -> "MPCSpec":
@@ -148,9 +166,16 @@ class MPCSpec:
     def group_key(self, m: Optional[int] = None) -> Tuple:
         """Serving-group identity: ``plan_key`` alone for pool-free specs
         (legacy-compatible), extended with the pool signature otherwise —
-        the ``(plan_key, pool_key)`` grouping the batched engine uses."""
+        the ``(plan_key, pool_key)`` grouping the batched engine uses.
+        A nonzero adversary budget is part of the identity too (verified
+        and unverified requests must never share one serving group), but
+        ``a = 0`` keeps the legacy key bit-for-bit."""
         pk = self.plan_key(m)
-        return pk if self.pool is None else pk + (self.pool.key,)
+        if self.pool is not None:
+            pk = pk + (self.pool.key,)
+        if self.adversaries:
+            pk = pk + (("byz", self.adversaries),)
+        return pk
 
     @property
     def effective_placement(self) -> Optional[Tuple[int, ...]]:
@@ -206,6 +231,18 @@ class MPCSpec:
         return self.t * self.t + self.z
 
     @property
+    def verified_threshold(self) -> int:
+        """Alive workers a Byzantine-verified decode needs: ``t²+z + 2a``.
+
+        The ``2a`` slack covers both defenses uniformly (DESIGN.md §9):
+        the MAC path needs ``t²+z`` *honest* survivors (≥ a liars to
+        spare), and the tag-free Berlekamp–Welch path consumes the same
+        ``2a`` extra points as error-locator equations.  Equals the plain
+        recovery threshold when ``a = 0``.
+        """
+        return self.recovery_threshold + 2 * self.adversaries
+
+    @property
     def frac_bits(self) -> int:
         return self.field.frac_bits
 
@@ -246,26 +283,42 @@ class MPCSpec:
         return AGECMPCProtocol.from_spec(self, m=m)
 
     # ------------------------------------------------- survivor validation
-    def validate_survivors(self, survivors) -> np.ndarray:
+    def validate_survivors(self, survivors, *,
+                           corrected: bool = False) -> np.ndarray:
         """First ``t²+z`` alive worker indices for a survivor mask.
 
         The public survivor-mask contract (formerly the protocol-private
-        ``_survivor_prefix``): raises ``ValueError`` on a mis-shaped mask
-        and ``RuntimeError`` when fewer than ``t²+z`` workers survive
-        (beyond coded tolerance).  The returned prefix is the decode
-        quorum; its frozen tuple keys the plan's survivor-table LRU.
+        ``_survivor_prefix``), raising from the structured taxonomy of
+        :mod:`repro.mpc.errors`: :class:`~repro.mpc.errors.MaskShapeError`
+        (a ``ValueError``) on a mis-shaped mask, and
+        :class:`~repro.mpc.errors.QuorumError` (a ``RuntimeError``) when
+        fewer workers survive than the quorum — ``t²+z`` for plain specs,
+        the verified threshold ``t²+z + 2a`` when ``adversaries > 0``
+        (the ``2a`` slack funds liar detection; DESIGN.md §9).  Pass
+        ``corrected=True`` for a mask that has *already* been through MAC
+        verification (liars excluded): only the plain ``t²+z`` decode
+        quorum applies then.  The returned prefix is always the ``t²+z``
+        decode quorum; its frozen tuple keys the plan's survivor-table
+        LRU.
         """
         t2z = self.recovery_threshold
+        need = t2z if corrected else self.verified_threshold
         n = self.n_workers
         alive = (np.ones(n, bool) if survivors is None
                  else np.asarray(survivors, bool))
         if alive.shape != (n,):
-            raise ValueError(
-                f"survivors mask must have shape ({n},), got {alive.shape}")
+            raise MaskShapeError(
+                f"survivors mask must have shape ({n},), got {alive.shape}",
+                spec=self, quorum=need)
         idx = np.nonzero(alive)[0]
-        if len(idx) < t2z:
-            raise RuntimeError(
-                f"only {len(idx)} workers alive < threshold {t2z}")
+        if len(idx) < need:
+            detail = ("" if need == t2z else
+                      f" (verified quorum t²+z+2a for adversary budget "
+                      f"a={self.adversaries})")
+            raise QuorumError(
+                f"only {len(idx)} workers alive < threshold {need}{detail}",
+                spec=self, quorum=need, alive=len(idx),
+                slots=np.nonzero(~alive)[0])
         return idx[:t2z]
 
 
@@ -342,7 +395,8 @@ class MPCSession:
         self._cost = cost
         self.failures: Dict[int, str] = {}
         self.stats = {"matmuls": 0, "blocks": 0, "flushes": 0,
-                      "retiles": 0, "masks_dropped": 0}
+                      "retiles": 0, "masks_dropped": 0,
+                      "corrections": 0, "evicted_devices": 0}
 
     # ------------------------------------------------------------- helpers
     def validate_survivors(self, survivors) -> np.ndarray:
@@ -364,6 +418,27 @@ class MPCSession:
         self._dead.update(int(w) for w in np.atleast_1d(
             np.asarray(workers, np.int64)).tolist())
         self.backend.fail(frozenset(self._dead))
+
+    def _absorb_byzantine(self) -> None:
+        """Surface the backend's verified-decode outcomes (DESIGN.md §9).
+
+        After every dispatch round: mirror the backend's correction /
+        eviction counters into :attr:`stats`, and route newly-detected
+        liars through the session's own :meth:`fail` path — a caught liar
+        IS attrition, reported in roster device ids for pool specs (the
+        backend already speaks device ids) and slot ids otherwise, so
+        spares/retune/replan escalation engages identically to a crash.
+        """
+        counters = getattr(self.backend, "byzantine_stats", None)
+        if counters is None:
+            return
+        c = counters()
+        self.stats["corrections"] = int(c.get("corrections", 0))
+        self.stats["evicted_devices"] = int(c.get("evicted_devices", 0))
+        take = getattr(self.backend, "take_new_liars", None)
+        liars = take() if take is not None else ()
+        if liars:
+            self.fail(sorted(liars))
 
     def _serve_ops(self, ops: List[BlockOp]) -> List[BlockOp]:
         """Fold session attrition into each block's decode mask at serve
@@ -404,6 +479,7 @@ class MPCSession:
         if req.ops:
             outs = self.backend.run_blocks(self._serve_ops(req.ops))
             self.stats["flushes"] += 1   # one backend dispatch round
+            self._absorb_byzantine()
         for out in outs:
             if isinstance(out, BlockFailure):
                 raise RuntimeError(out.reason)
@@ -446,6 +522,7 @@ class MPCSession:
         if ops:
             outs = self.backend.run_blocks(self._serve_ops(ops))
             self.stats["flushes"] += 1   # one backend dispatch round
+            self._absorb_byzantine()
 
         results: Dict[int, jnp.ndarray] = {}
         pos = 0
@@ -677,12 +754,25 @@ def connect(spec: MPCSpec, backend: str = "local", **opts) -> MPCSession:
     A spec carrying a :class:`repro.mpc.workers.WorkerPool` changes
     ``fail`` ids to roster device ids and makes the batched backend's
     elastic pools provision high-capacity spares (DESIGN.md §8).
+    A spec with ``adversaries > 0`` routes every decode through MAC
+    verification on the local and batched backends (DESIGN.md §9);
+    ``injector=`` (a :class:`repro.mpc.byzantine.FaultInjector`) wraps the
+    backend's shares in a seeded corruption schedule for testing — the
+    sharded backend supports neither and is rejected here.
     """
     from .backends import resolve_backend
 
     key = opts.pop("key", None)
     tile_budget = opts.pop("tile_budget", DEFAULT_TILE_BUDGET)
     cost = opts.pop("cost", None)
+    if backend == "sharded" and (spec.adversaries
+                                 or opts.get("injector") is not None):
+        # the mesh runner has no verification hook yet (DESIGN.md §9);
+        # silently serving unverified shares under a Byzantine spec would
+        # defeat the budget's whole point — fail at connect time
+        raise ValueError(
+            "the sharded backend does not verify shares: use the local or "
+            "batched backend for specs with adversaries > 0 / an injector")
     if cost is not None and backend == "batched":
         # the engine re-tunes under the same objective it serves with
         opts.setdefault("cost", cost)

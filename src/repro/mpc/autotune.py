@@ -284,7 +284,7 @@ def _axis_range(pinned: Optional[int], limit: int) -> Sequence[int]:
 
 def _feasible(n_workers: int, z: int, schemes: Sequence[str],
               t_axis: Sequence[int], s_axis: Sequence[int],
-              lam: Optional[int]):
+              lam: Optional[int], adversaries: int = 0):
     """Yield every feasible family member ``(scheme, s, t, λ, N)``.
 
     The one enumeration path shared by :func:`search` and
@@ -294,6 +294,12 @@ def _feasible(n_workers: int, z: int, schemes: Sequence[str],
     (``|P(H)| ⊇ P(C_A)+P(C_B)`` has at least ``st`` elements, so such a
     code can never fit), sizes the rest by the memoized degree-set
     enumeration, and keeps those within the worker budget.
+
+    A Byzantine budget ``adversaries = a`` tightens feasibility exactly
+    like the privacy budget ``z`` does (DESIGN.md §9): the code's worker
+    count must also cover the verified quorum ``t²+z + 2a``, so
+    partitions whose N leaves no room for liar detection are pruned here
+    — before any of them can win the ranking.
     """
     for scheme in schemes:
         if scheme not in _SCHEME_RANK:
@@ -308,7 +314,8 @@ def _feasible(n_workers: int, z: int, schemes: Sequence[str],
                     continue
                 for lm in _lam_choices(scheme, tt, z, lam):
                     n = _resolve_code(scheme, ss, tt, z, lm).n_workers
-                    if n <= n_workers:
+                    if n <= n_workers and (
+                            n >= tt * tt + z + 2 * adversaries):
                         yield scheme, ss, tt, lm, n
 
 
@@ -338,7 +345,7 @@ def search(n_workers: Optional[int] = None, z: int = None, shape=None, *,
            cost: Optional[CostModel] = None,
            schemes: Sequence[str] = ("age", "entangled", "polydot"),
            s: Optional[int] = None, t: Optional[int] = None,
-           lam: Optional[int] = None,
+           lam: Optional[int] = None, adversaries: int = 0,
            tile_budget: int = DEFAULT_TILE_BUDGET,
            max_partition: int = MAX_PARTITION) -> Tuple[Candidate, ...]:
     """Enumerate + rank every feasible candidate (best first).
@@ -366,12 +373,15 @@ def search(n_workers: Optional[int] = None, z: int = None, shape=None, *,
         raise ValueError(f"privacy bound z must be >= 1, got {z}")
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
+    if adversaries < 0:
+        raise ValueError(
+            f"adversaries must be >= 0, got {adversaries}")
     cm = DEFAULT_COST if cost is None else cost
     r, k, c = _shape3(shape)
     out = []
     for scheme, ss, tt, lm, n in _feasible(
             budget, z, schemes, _axis_range(t, max_partition),
-            _axis_range(s, max_partition), lam):
+            _axis_range(s, max_partition), lam, adversaries):
         placement = None if pool is None else pool.place(n, cm,
                                                          within=within)
         m, blocks, over, sc = best_block(
@@ -422,7 +432,8 @@ def tune(n_workers: Optional[int] = None, z: int = None, shape=None, *,
          cost: Optional[CostModel] = None,
          schemes: Sequence[str] = ("age", "entangled", "polydot"),
          s: Optional[int] = None, t: Optional[int] = None,
-         lam: Optional[int] = None, field: Field = DEFAULT_FIELD,
+         lam: Optional[int] = None, adversaries: int = 0,
+         field: Field = DEFAULT_FIELD,
          tile_budget: int = DEFAULT_TILE_BUDGET,
          max_partition: int = MAX_PARTITION) -> TuneResult:
     """Solve the paper's optimization layer for one workload.
@@ -447,6 +458,10 @@ def tune(n_workers: Optional[int] = None, z: int = None, shape=None, *,
     schemes   : code families to search
     s, t, lam : pin any of the partition / gap axes (e.g. validation
                 against the Theorem-3 grid pins ``s`` and ``t``)
+    adversaries : Byzantine budget ``a`` (DESIGN.md §9) — treated like
+                ``z`` during feasibility: candidates must provide
+                ``N ≥ t²+z+2a`` workers, and the winning spec carries the
+                budget (its decodes run MAC-verified)
     field     : prime field + fixed-point config for the returned spec
     tile_budget : dispatch cap forwarded to block co-optimization and to
                 sessions opened via :meth:`TuneResult.connect`
@@ -460,17 +475,19 @@ def tune(n_workers: Optional[int] = None, z: int = None, shape=None, *,
         raise ValueError(f"tile budget must be >= 1, got {tile_budget}")
     cands = search(n_workers, z, shape, pool=pool, within=within,
                    batch=batch, cost=cost, schemes=schemes, s=s, t=t,
-                   lam=lam, tile_budget=tile_budget,
-                   max_partition=max_partition)
+                   lam=lam, adversaries=adversaries,
+                   tile_budget=tile_budget, max_partition=max_partition)
     if not cands:
         raise ValueError(
             f"no feasible spec: worker budget "
             f"N={_pool_budget(n_workers, pool, within)} is below the "
-            f"family minimum for z={z} (schemes={tuple(schemes)})")
+            f"family minimum for z={z}, a={adversaries} "
+            f"(schemes={tuple(schemes)})")
     best = cands[0]
     spec = MPCSpec(s=best.s, t=best.t, z=z, lam=best.lam,
                    scheme=best.scheme, field=field, m=best.m,
-                   pool=pool, placement=best.placement)
+                   pool=pool, placement=best.placement,
+                   adversaries=adversaries)
     r, k, c = _shape3(shape)
     # the winner's m is baked into the spec and bypasses the session's
     # block search, so the documented over-budget clamp must warn HERE —
@@ -487,6 +504,7 @@ def retune_spec(n_workers: Optional[int] = None, z: int = None, *, m: int,
                 field: Field = DEFAULT_FIELD,
                 cost: Optional[CostModel] = None,
                 schemes: Sequence[str] = ("age",),
+                adversaries: int = 0,
                 max_partition: Optional[int] = None):
     """Best spec decodable with the survivors at a *fixed* block side
     ``m`` (shares were already tiled for it), or ``None``.
@@ -516,12 +534,16 @@ def retune_spec(n_workers: Optional[int] = None, z: int = None, *, m: int,
     budget = _pool_budget(n_workers, pool, within)
     if z is None or z < 1:
         raise ValueError(f"privacy bound z must be >= 1, got {z}")
+    if adversaries < 0:
+        raise ValueError(
+            f"adversaries must be >= 0, got {adversaries}")
     cm = DEFAULT_COST if cost is None else cost
     limit = min(m, MAX_PARTITION if max_partition is None else max_partition)
     divisors = [d for d in range(1, limit + 1) if m % d == 0]
     best: Optional[Tuple[Tuple, Candidate]] = None
     for scheme, ss, tt, lm, n in _feasible(budget, z, schemes,
-                                           divisors, divisors, None):
+                                           divisors, divisors, None,
+                                           adversaries):
         placement = None if pool is None else pool.place(n, cm,
                                                          within=within)
         cand = Candidate(
@@ -538,4 +560,5 @@ def retune_spec(n_workers: Optional[int] = None, z: int = None, *, m: int,
         return None
     c = best[1]
     return MPCSpec(s=c.s, t=c.t, z=z, lam=c.lam, scheme=c.scheme,
-                   field=field, m=m, pool=pool, placement=c.placement)
+                   field=field, m=m, pool=pool, placement=c.placement,
+                   adversaries=adversaries)

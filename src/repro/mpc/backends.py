@@ -60,27 +60,77 @@ class MPCBackend:
         block side differs from the in-flight spec's."""
         return None
 
+    def byzantine_stats(self) -> Dict[str, int]:
+        """Cumulative verified-decode counters (DESIGN.md §9): shares
+        corrected out of a decode and distinct workers evicted as liars.
+        Backends without a verified path report zeros."""
+        return {"corrections": 0, "evicted_devices": 0}
+
+    def take_new_liars(self) -> set:
+        """Drain liar ids caught since the last call — roster device ids
+        for pool specs, protocol slots otherwise.  The session routes
+        these through its own ``fail`` path (a liar IS attrition)."""
+        return set()
+
 
 class LocalBackend(MPCBackend):
-    """Single-process staged-jit execution (fused / pallas / reference)."""
+    """Single-process staged-jit execution (fused / pallas / reference).
+
+    With ``injector=`` (a :class:`~repro.mpc.byzantine.FaultInjector`),
+    blocks whose spec carries an adversary budget are served through
+    ``AGECMPCProtocol.run_verified`` with the injector corrupting shares
+    between the worker phase and the MAC check; the per-op round counter
+    drives the injector's schedule.  Caught liars surface through
+    :meth:`byzantine_stats` / :meth:`take_new_liars` in roster device ids
+    (slot ids for pool-free specs)."""
 
     name = "local"
 
-    def __init__(self, *, mode: str = "fused"):
+    def __init__(self, *, mode: str = "fused", injector=None):
         if mode not in ("fused", "pallas", "reference"):
             raise ValueError(
                 f"unknown mode {mode!r}: expected fused|pallas|reference")
         self.mode = mode
+        self.injector = injector
+        self._round = 0
+        self._corrections = 0
+        self._evicted: set = set()
+        self._new_liars: set = set()
+
+    def byzantine_stats(self) -> Dict[str, int]:
+        return {"corrections": self._corrections,
+                "evicted_devices": len(self._evicted)}
+
+    def take_new_liars(self) -> set:
+        out, self._new_liars = self._new_liars, set()
+        return out
+
+    def _run_verified(self, op: BlockOp):
+        rnd, self._round = self._round, self._round + 1
+        y, verdict = op.proto.run_verified(
+            op.a, op.b, op.key, survivors=op.survivors,
+            injector=self.injector, round_id=rnd)
+        if verdict.liars:
+            self._corrections += verdict.corrected
+            placement = op.proto.spec.effective_placement
+            devs = {int(s) if placement is None else int(placement[s])
+                    for s in verdict.liars}
+            self._new_liars |= devs - self._evicted
+            self._evicted |= devs
+        return y
 
     def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
         outs: List[BlockResult] = []
         for op in ops:
             try:
-                outs.append(op.proto.run(op.a, op.b, op.key,
-                                         survivors=op.survivors,
-                                         mode=self.mode))
-            except RuntimeError as e:  # below-threshold mask: isolate
-                outs.append(BlockFailure(str(e)))
+                if op.proto.adversaries:
+                    outs.append(self._run_verified(op))
+                else:
+                    outs.append(op.proto.run(op.a, op.b, op.key,
+                                             survivors=op.survivors,
+                                             mode=self.mode))
+            except RuntimeError as e:  # below-threshold mask / liar
+                outs.append(BlockFailure(str(e)))  # budget blown: isolate
         return outs
 
 
@@ -139,15 +189,24 @@ class BatchedBackend(MPCBackend):
     handles_attrition = True
 
     def __init__(self, *, spares: int = 2, max_batch: int = 64, engine=None,
-                 cost=None):
+                 cost=None, injector=None):
         from .engine import MPCEngine
 
         self.engine = engine if engine is not None else MPCEngine(
-            spares=spares, max_batch=max_batch, cost=cost)
+            spares=spares, max_batch=max_batch, cost=cost,
+            injector=injector)
+        if engine is not None and injector is not None:
+            self.engine.injector = injector
         self._dead: frozenset = frozenset()
 
     def fail(self, dead: frozenset) -> None:
         self._dead = frozenset(dead)
+
+    def byzantine_stats(self) -> Dict[str, int]:
+        return self.engine.byzantine_stats()
+
+    def take_new_liars(self) -> set:
+        return self.engine.take_new_liars()
 
     def _report_attrition(self, proto) -> None:
         if not self._dead:

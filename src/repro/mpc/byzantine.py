@@ -1,0 +1,347 @@
+"""Byzantine-tolerant decode: share MACs + error-locating interpolation.
+
+Every failure mode the engine survived before this module was an
+*erasure* — a worker that vanished.  A worker that returns a **wrong**
+``I(α_n)`` share silently corrupts the decoded product.  This module adds
+the two standard defenses on top of the repo's existing polynomial
+machinery (DESIGN.md §9):
+
+* **Per-share field MACs** (SPDZ-style information-theoretic tags).  For a
+  request keyed by ``key``, derive ``(γ, o_0..o_{N-1}, r)`` from
+  ``fold_in(key, MAC_FOLD)`` — a nonzero MAC scalar, per-slot offsets and
+  a compression vector — and tag every worker's share matrix as::
+
+      tag_n = γ · ⟨vec(I(α_n)), r⟩ + o_n   (mod p)
+
+  The tag is linear in the share, so it is one tiny staged jit program
+  (``ProtocolStages.tags`` — the verified path stays compiled end to
+  end).  A tamperer who does not know ``γ`` (known only to the
+  sources/master, never to workers) forges a valid tag for a modified
+  share with probability ``1/p``: the check localizes liars *by slot*
+  before decode, which is exactly the input the ``fail``/``retune``
+  eviction path needs.
+
+* **Error-locating interpolation** (:func:`locate_errors`) — the
+  Reed–Solomon / Berlekamp–Welch decoder over the same generalized-
+  Vandermonde tables: the survivors' shares are evaluations of the
+  degree-``< t²+z`` polynomial ``I(x)``, so with ``q ≥ (t²+z) + 2a``
+  points of which at most ``a`` are wrong, solving the linear system
+  ``Q(α_n) = y_n · E(α_n)`` (``E`` monic of degree ``a``, ``Q = I·E``)
+  over ``F_p`` pins the corrupted positions as the roots of ``E`` — no
+  tags required.  It reuses :func:`repro.mpc.lagrange.vandermonde`
+  (Montgomery pow tables) and the vectorized ``F_p`` elimination idiom of
+  ``inv_mod``.  This is the tag-free fallback and the mathematical
+  justification for the spec-level quorum ``n ≥ t²+z+2a``.
+
+* **A seeded fault-injection harness** (:class:`FaultInjector`): scripted
+  or rate-driven tamper / bit-flip / stale-share / tag-corruption
+  schedules that wrap any backend's share matrix before verification, so
+  CI can prove bit-exact serving under *active* corruption, not just
+  dropout.
+
+Quorum accounting: detection alone needs ``t²+z`` honest shares among the
+alive set, which the uniform ``n ≥ t²+z + 2a`` contract guarantees for up
+to ``a`` liars with ``a`` to spare — the same slack the tag-free
+Berlekamp–Welch path consumes as equations.  Both paths therefore share
+one spec-level budget (``MPCSpec(adversaries=a)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .errors import AdversaryBudgetError, QuorumError
+from .field import Field
+from .lagrange import matmul_mod, vandermonde
+
+#: fold constant deriving the MAC key stream from a request key.  Any
+#: fixed constant works — it only has to be distinct from the per-block
+#: counters the session folds in (small ints) so MAC randomness never
+#: collides with phase-1/2 randomness.
+MAC_FOLD = 0x4D41C5
+
+
+# ==================================================================== MACs
+def mac_params(plan, key) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The request's MAC parameters ``(γ, offsets [N], r [mt·mt])``.
+
+    Derived deterministically from the request key via a dedicated fold,
+    so sources and master agree without extra communication; γ is drawn
+    nonzero (a zero MAC scalar would tag every share identically).
+    """
+    p = plan.p
+    n = plan.n_workers
+    mt = plan.m // plan.t
+    kg, ko, kr = jax.random.split(
+        jax.random.fold_in(jnp.asarray(key), MAC_FOLD), 3)
+    gamma = jax.random.randint(kg, (), 1, p, dtype=jnp.int64)
+    offsets = jax.random.randint(ko, (n,), 0, p, dtype=jnp.int64)
+    rvec = jax.random.randint(kr, (mt * mt,), 0, p, dtype=jnp.int64)
+    return gamma, offsets, rvec
+
+
+def share_tags(plan, i_points, key) -> jnp.ndarray:
+    """Honest MAC tags ``[N]`` for one request's share matrices.
+
+    Runs the plan's compiled ``tags`` stage (the staged jit program the
+    batched engine vmaps) on parameters from :func:`mac_params`.
+    """
+    gamma, offsets, rvec = mac_params(plan, key)
+    return plan.stages().tags(
+        jnp.asarray(i_points, jnp.int64), gamma, offsets, rvec)
+
+
+def check_shares(plan, i_points, tags, key) -> np.ndarray:
+    """Recompute tags for the (possibly corrupted) shares and compare.
+
+    Returns a bool ``[N]`` honesty mask: ``False`` marks a slot whose
+    share/tag pair fails verification — a liar, up to the ``1/p`` forgery
+    probability of the information-theoretic MAC.
+    """
+    fresh = share_tags(plan, i_points, key)
+    return np.asarray(jnp.equal(fresh, jnp.asarray(tags)))
+
+
+# ==================================================== Berlekamp–Welch decode
+def _solve_any(p: int, a: np.ndarray, b: np.ndarray) -> Optional[np.ndarray]:
+    """One particular solution of ``a x = b`` over ``F_p`` or ``None``.
+
+    Rank-revealing Gauss–Jordan on the augmented system, free variables
+    pinned to 0 — the same vectorized int64 row-op idiom as
+    :func:`repro.mpc.lagrange.inv_mod` (residues < p < 2³¹, so every
+    product fits int64), but for rectangular / rank-deficient systems:
+    Berlekamp–Welch systems are overdetermined by construction and go
+    singular when the trial error count overshoots the true one.
+    """
+    a = np.atleast_2d(np.asarray(a, np.int64)) % p
+    b = np.asarray(b, np.int64) % p
+    rows, cols = a.shape
+    aug = np.concatenate([a, b.reshape(rows, 1)], axis=1)
+    piv_cols: List[int] = []
+    r = 0
+    for c in range(cols):
+        if r == rows:
+            break
+        nz = np.nonzero(aug[r:, c])[0]
+        if nz.size == 0:
+            continue
+        piv = r + int(nz[0])
+        if piv != r:
+            aug[[r, piv]] = aug[[piv, r]]
+        inv = pow(int(aug[r, c]), p - 2, p)
+        aug[r] = aug[r] * inv % p
+        f = aug[:, c].copy()
+        f[r] = 0
+        aug = (aug - f[:, None] * aug[r][None, :]) % p
+        piv_cols.append(c)
+        r += 1
+    # a zeroed-out row demanding a nonzero rhs: inconsistent system
+    if np.any((aug[r:, :cols] == 0).all(axis=1) & (aug[r:, cols] != 0)):
+        return None
+    x = np.zeros(cols, np.int64)
+    for i, c in enumerate(piv_cols):
+        x[c] = aug[i, cols]
+    return x
+
+
+def _poly_eval(field: Field, coeffs: np.ndarray,
+               alphas: np.ndarray) -> np.ndarray:
+    """Evaluate ``Σ coeffs[j]·x^j`` at every α (Vandermonde row dot)."""
+    v = vandermonde(field, alphas, np.arange(len(coeffs), dtype=np.int64))
+    return matmul_mod(v, np.asarray(coeffs, np.int64).reshape(-1, 1),
+                      field.p)[:, 0]
+
+
+def _poly_divmod(num: np.ndarray, den: np.ndarray,
+                 p: int) -> Optional[np.ndarray]:
+    """``num / den`` over ``F_p[x]`` (coeffs low→high, ``den`` monic);
+    ``None`` when the division leaves a remainder (no valid codeword)."""
+    num = list(int(v) % p for v in num)
+    den = [int(v) % p for v in den]
+    dd = len(den) - 1
+    out = [0] * max(len(num) - dd, 0)
+    for i in range(len(num) - 1, dd - 1, -1):
+        q = num[i] % p
+        out[i - dd] = q
+        if q:
+            for j, dv in enumerate(den):
+                num[i - dd + j] = (num[i - dd + j] - q * dv) % p
+    if any(v % p for v in num[:dd] or [0]):
+        return None
+    return np.array(out, np.int64)
+
+
+def locate_errors(field: Field, alphas: Sequence[int], values: Sequence[int],
+                  degree_bound: int, max_errors: int) -> np.ndarray:
+    """Positions (into ``alphas``) whose ``values`` are corrupted.
+
+    Berlekamp–Welch over ``F_p``: ``values[i]`` claims to be ``I(alphas[i])``
+    for some polynomial ``I`` with ``degree_bound`` coefficients
+    (degree < ``degree_bound``), with at most ``max_errors`` claims wrong.
+    Requires ``len(alphas) ≥ degree_bound + 2·max_errors`` points.  Solves
+    ``Q(α) = y·E(α)`` with ``E`` monic of trial degree ``a`` (walking ``a``
+    down — the true error count may be smaller), extracts ``I = Q/E`` and
+    verifies it explains every non-root position.  Returns the (possibly
+    empty) sorted position array; raises :class:`QuorumError` on too few
+    points and :class:`AdversaryBudgetError` when no consistent decoding
+    exists within the budget.
+    """
+    p = field.p
+    al = np.atleast_1d(np.asarray(alphas, np.int64)) % p
+    y = np.atleast_1d(np.asarray(values, np.int64)) % p
+    q = len(al)
+    d = int(degree_bound)
+    if q < d + 2 * max_errors:
+        raise QuorumError(
+            f"error-locating decode needs {d + 2 * max_errors} points for "
+            f"budget a={max_errors}, got only {q}",
+            quorum=d + 2 * max_errors, alive=q)
+    for a_try in range(min(int(max_errors), (q - d) // 2), -1, -1):
+        nq = d + a_try                       # Q = I·E has nq coefficients
+        vq = vandermonde(field, al, np.arange(nq, dtype=np.int64))
+        ve = vandermonde(field, al, np.arange(a_try, dtype=np.int64))
+        lead = vandermonde(field, al, np.array([a_try], np.int64))[:, 0]
+        mat = np.concatenate([vq, (-(y[:, None] * ve)) % p], axis=1)
+        rhs = y * lead % p
+        sol = _solve_any(p, mat, rhs)
+        if sol is None:
+            continue
+        e_coeffs = np.concatenate([sol[nq:], [1]])       # monic E, low→high
+        i_coeffs = _poly_divmod(sol[:nq], e_coeffs, p)
+        if i_coeffs is None:
+            continue
+        pred = _poly_eval(field, np.pad(i_coeffs, (0, d - len(i_coeffs))),
+                          al)
+        bad = np.nonzero(pred != y)[0]
+        if len(bad) > a_try:
+            continue                          # overshot: fewer real errors
+        return bad.astype(np.int64)
+    raise AdversaryBudgetError(
+        f"no consistent decoding within adversary budget a={max_errors} "
+        f"over {q} points (degree bound {d})",
+        quorum=d + 2 * max_errors, alive=q)
+
+
+# =============================================================== verdicts
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """What a verified decode concluded about one request's shares."""
+
+    liars: Tuple[int, ...]      # slots whose shares failed verification
+    corrected: int              # corrupted shares detected and excluded
+    quorum: Tuple[int, ...]     # honest decode prefix actually used
+
+
+# ======================================================== fault injection
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic, seeded share-corruption schedules (the CI harness).
+
+    Wraps a backend's share matrices *after* honest tagging and *before*
+    verification — the worker-side tamper window.  Two scheduling modes,
+    combinable:
+
+    * ``schedule``: ``{round_id: [(slot, mode), ...]}`` — scripted,
+      exact corruption per round (tests pin counters against this);
+    * ``rate`` + ``slots``: per round, each candidate slot is corrupted
+      with probability ``rate`` under ``mode`` (``rate=1.0`` with one
+      slot = "this worker always lies").
+
+    Corruption modes:
+
+    * ``"tamper"`` — add a uniform **nonzero** field delta to every entry
+      of the slot's share (the classic malicious worker);
+    * ``"flip"``  — flip one low bit of every entry (guaranteed to change
+      the residue mod p for both supported primes);
+    * ``"stale"`` — replay the slot's share from the previous round this
+      injector saw (zeros on the first round) — a replay/desync fault;
+    * ``"tag"``   — corrupt only the MAC tag, leaving the share intact
+      (a lying *verifier* channel; detected the same way).
+
+    Every applied corruption is appended to :attr:`log` as
+    ``(round_id, slot, mode)`` so tests can assert exact schedules.
+    """
+
+    seed: int = 0
+    schedule: Optional[Dict[int, Sequence[Tuple[int, str]]]] = None
+    rate: float = 0.0
+    slots: Optional[Sequence[int]] = None
+    mode: str = "tamper"
+
+    MODES = ("tamper", "flip", "stale", "tag")
+
+    def __post_init__(self):
+        if self.mode not in self.MODES:
+            raise ValueError(
+                f"unknown mode {self.mode!r}: expected one of {self.MODES}")
+        if not 0.0 <= float(self.rate) <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate!r}")
+        if self.schedule is not None:
+            for rnd, ents in self.schedule.items():
+                for slot, mode in ents:
+                    if mode not in self.MODES:
+                        raise ValueError(
+                            f"unknown mode {mode!r} in schedule round "
+                            f"{rnd}: expected one of {self.MODES}")
+        self.log: List[Tuple[int, int, str]] = []
+        self._stale: Dict[int, np.ndarray] = {}
+
+    # ------------------------------------------------------------ planning
+    def plan_round(self, round_id: int, n: int) -> List[Tuple[int, str]]:
+        """The (slot, mode) corruptions to apply in one round."""
+        out: List[Tuple[int, str]] = []
+        if self.schedule is not None:
+            out.extend((int(s), m) for s, m in
+                       self.schedule.get(int(round_id), ())
+                       if 0 <= int(s) < n)
+        if self.rate > 0.0:
+            rng = np.random.default_rng(
+                (int(self.seed) * 0x9E3779B1 + int(round_id)) % 2**63)
+            cand = (range(n) if self.slots is None
+                    else [int(s) for s in self.slots if 0 <= int(s) < n])
+            out.extend((s, self.mode) for s in cand
+                       if rng.random() < self.rate)
+        return out
+
+    # ----------------------------------------------------------- corruption
+    def corrupt(self, plan, i_points, tags, round_id: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Apply this round's corruptions to one request's shares/tags."""
+        p = plan.p
+        pts = np.array(jnp.asarray(i_points, jnp.int64))      # [N, mt, mt]
+        tgs = np.array(jnp.asarray(tags, jnp.int64))          # [N]
+        plan_ents = self.plan_round(round_id, pts.shape[0])
+        honest = pts.copy()
+        for slot, mode in plan_ents:
+            rng = np.random.default_rng(
+                (int(self.seed) * 0x9E3779B1 + int(round_id) * 0x85EBCA77
+                 + slot) % 2**63)
+            if mode == "tamper":
+                delta = rng.integers(1, p, size=pts[slot].shape)
+                pts[slot] = (pts[slot] + delta) % p
+            elif mode == "flip":
+                # residues < p < 2³¹: flipping bit 0 stays below 2³¹ and
+                # always changes the value mod p
+                pts[slot] = (pts[slot] ^ 1) % p
+            elif mode == "stale":
+                prev = self._stale.get(slot)
+                pts[slot] = (np.zeros_like(pts[slot]) if prev is None
+                             else prev)
+            elif mode == "tag":
+                tgs[slot] = (tgs[slot] + int(rng.integers(1, p))) % p
+            self.log.append((int(round_id), int(slot), mode))
+        # remember the HONEST shares for next round's stale replays
+        for slot in range(honest.shape[0]):
+            self._stale[slot] = honest[slot]
+        return jnp.asarray(pts), jnp.asarray(tgs)
+
+    def applied(self, round_id: Optional[int] = None
+                ) -> List[Tuple[int, int, str]]:
+        """The corruption log, optionally filtered to one round."""
+        if round_id is None:
+            return list(self.log)
+        return [e for e in self.log if e[0] == int(round_id)]

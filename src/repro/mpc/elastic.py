@@ -37,6 +37,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from .api import MPCSpec
+from .errors import QuorumError
 from .field import DEFAULT_FIELD, Field
 from .planner import _resolve_code
 from .protocol import AGECMPCProtocol
@@ -67,6 +68,7 @@ class ElasticPool:
     field: Field = DEFAULT_FIELD
     pool: Optional[WorkerPool] = None
     placement: Optional[Tuple[int, ...]] = None
+    adversaries: int = 0
 
     @classmethod
     def from_spec(cls, spec: MPCSpec, *, spares: int = 2,
@@ -75,7 +77,8 @@ class ElasticPool:
         return cls(s=spec.s, t=spec.t, z=spec.z, m=spec._block(m),
                    spares=spares, scheme=spec.scheme, lam=spec.lam,
                    field=spec.field, pool=spec.pool,
-                   placement=spec.effective_placement)
+                   placement=spec.effective_placement,
+                   adversaries=spec.adversaries)
 
     @property
     def spec(self) -> MPCSpec:
@@ -85,7 +88,8 @@ class ElasticPool:
         self.proto = AGECMPCProtocol.from_spec(MPCSpec(
             s=self.s, t=self.t, z=self.z, lam=self.lam,
             scheme=self.scheme, field=self.field, m=self.m,
-            pool=self.pool, placement=self.placement))
+            pool=self.pool, placement=self.placement,
+            adversaries=self.adversaries))
         n = self.proto.n_workers
         if self.pool is None:
             self.device_map: Optional[Tuple[int, ...]] = None
@@ -151,8 +155,10 @@ class ElasticPool:
         idx = np.nonzero(self.alive)[0]
         n = self.proto.n_workers
         if len(idx) < n:
-            raise RuntimeError(
-                f"pool has {len(idx)} alive < N={n}; re-plan required")
+            raise QuorumError(
+                f"pool has {len(idx)} alive < N={n}; re-plan required",
+                quorum=n, alive=len(idx),
+                slots=np.nonzero(~self.alive)[0])
         return idx[:n]
 
     def reconstruction_weights(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -167,8 +173,13 @@ class ElasticPool:
         return idx, w
 
     def phase3_tolerance(self) -> int:
-        """Failures absorbable after the exchange with zero recomputation."""
-        return self.proto.n_workers - self.proto.recovery_threshold
+        """Failures absorbable after the exchange with zero recomputation.
+
+        With an adversary budget ``a``, ``2a`` of the redundant shares are
+        reserved for error location/exclusion (the verified quorum is
+        ``t²+z+2a``), so crash tolerance shrinks by that reservation."""
+        return (self.proto.n_workers - self.proto.recovery_threshold
+                - 2 * self.adversaries)
 
     # -------------------------------------------------------------- re-tune
     def retune(self, cost=None) -> Optional[AGECMPCProtocol]:
@@ -188,7 +199,8 @@ class ElasticPool:
         if self.pool is None:
             spec = retune_spec(int(self.alive.sum()), self.z, m=self.m,
                                field=self.field, cost=cost,
-                               schemes=(self.scheme,))
+                               schemes=(self.scheme,),
+                               adversaries=self.adversaries)
         else:
             # re-tune against the surviving CAPACITY VECTOR, not just the
             # surviving count: the candidate search re-places every N on
@@ -197,7 +209,8 @@ class ElasticPool:
             spec = retune_spec(z=self.z, m=self.m, pool=self.pool,
                                within=self.surviving_devices(),
                                field=self.field, cost=cost,
-                               schemes=(self.scheme,))
+                               schemes=(self.scheme,),
+                               adversaries=self.adversaries)
         return None if spec is None else AGECMPCProtocol.from_spec(spec)
 
     # -------------------------------------------------------------- re-plan
@@ -222,6 +235,9 @@ class ElasticPool:
                 code = _resolve_code(self.scheme, s, t, self.z, self.lam)
                 if code.n_workers > alive:
                     continue
+                # verified quorum: a liar budget reserves 2a extra shares
+                if code.n_workers < t * t + self.z + 2 * self.adversaries:
+                    continue
                 # prefer max st² (least per-worker compute: m³/(st²))
                 if best is None or s * t * t > best[0]:
                     best = (s * t * t, s, t)
@@ -230,4 +246,4 @@ class ElasticPool:
         _, s, t = best
         return AGECMPCProtocol.from_spec(MPCSpec(
             s=s, t=t, z=self.z, lam=self.lam, scheme=self.scheme,
-            field=self.field, m=self.m))
+            field=self.field, m=self.m, adversaries=self.adversaries))

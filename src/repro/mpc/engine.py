@@ -31,6 +31,14 @@ the fewest possible compiled-program dispatches:
 * **Failure isolation** — an unservable request (effective mask below
   threshold, infeasible pool) never takes the batch down: it lands in
   ``engine.failures`` with a reason while every other request is served.
+* **Byzantine verification** — groups whose spec carries an adversary
+  budget (``spec.adversaries > 0``) MAC-tag every share with one vmapped
+  ``tags`` dispatch, run the optional :class:`~repro.mpc.byzantine.
+  FaultInjector` over the served shares, and exclude MAC-failing slots
+  before decode.  A caught liar is evicted from the group's elastic pool
+  (``stats["corrections"]``, ``stats["evicted_devices"]``); a request
+  whose liar count exceeds the budget fails alone with an
+  :class:`~repro.mpc.errors.AdversaryBudgetError` (DESIGN.md §9).
 
 Simulation scope: like ``AGECMPCProtocol.run``, phases 1–2 always execute
 all N logical workers of the serving plan; pool attrition therefore
@@ -48,8 +56,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import byzantine as byz
 from .api import MPCSpec
 from .elastic import ElasticPool
+from .errors import AdversaryBudgetError, QuorumError
 from .field import DEFAULT_FIELD, Field
 from .planner import PlanKey
 from .protocol import AGECMPCProtocol
@@ -90,7 +100,8 @@ def _pad_pow2(n: int, cap: int) -> int:
 class MPCEngine:
     """Batched MPC request engine: queue, group, vmap, decode, escalate."""
 
-    def __init__(self, *, spares: int = 2, max_batch: int = 64, cost=None):
+    def __init__(self, *, spares: int = 2, max_batch: int = 64, cost=None,
+                 injector=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.spares = spares
@@ -99,6 +110,10 @@ class MPCEngine:
         # stats["replans"] counts every escalation, stats["retunes"] the
         # subset won by the cost-model search (DESIGN.md §7)
         self.cost = cost
+        # optional FaultInjector: corrupts served shares/tags of verified
+        # groups (spec.adversaries > 0) before the MAC check, keyed by
+        # request id as the round counter (DESIGN.md §9)
+        self.injector = injector
         self._queue: List[MPCRequest] = []
         # keyed by the serving-group identity (``proto.group_key`` — the
         # plan key extended with placement + pool signature for
@@ -107,8 +122,22 @@ class MPCEngine:
         self._replans: Dict[PlanKey, AGECMPCProtocol] = {}
         self._next_rid = 0
         self.stats = {"batches": 0, "replans": 0, "retunes": 0,
-                      "drains": 0, "masks_dropped": 0, "failed": 0}
+                      "drains": 0, "masks_dropped": 0, "failed": 0,
+                      "corrections": 0, "evicted_devices": 0}
         self.failures: Dict[int, str] = {}
+        self._new_liars: set = set()
+
+    # --------------------------------------------------------- byzantine
+    def byzantine_stats(self) -> Dict[str, int]:
+        """Cumulative verified-decode counters (mirrored by the session)."""
+        return {"corrections": self.stats["corrections"],
+                "evicted_devices": self.stats["evicted_devices"]}
+
+    def take_new_liars(self) -> set:
+        """Drain the liar ids detected since the last call — roster device
+        ids for pool-backed groups, protocol slots otherwise."""
+        out, self._new_liars = self._new_liars, set()
+        return out
 
     # ------------------------------------------------------------- pools
     def pool(self, *, spec: Optional[MPCSpec] = None, s: int = None,
@@ -196,9 +225,10 @@ class MPCEngine:
             else:
                 new = pool.replan()
             if new is None:
-                raise RuntimeError(
+                raise QuorumError(
                     f"pool for {key} infeasible ({int(pool.alive.sum())} "
-                    f"alive) and no coarser partitioning fits")
+                    f"alive) and no coarser partitioning fits",
+                    quorum=proto.n_workers, alive=int(pool.alive.sum()))
             self._replans[key] = new
             self.stats["replans"] += 1
         raise RuntimeError("replan escalation did not converge")
@@ -252,6 +282,25 @@ class MPCEngine:
     def _fail_request(self, req: MPCRequest, reason: str) -> None:
         self.failures[req.rid] = reason
         self.stats["failed"] += 1
+
+    def _evict_liars(self, proto: AGECMPCProtocol, slots) -> None:
+        """A caught liar IS attrition: kill its pool slot so the standard
+        fail → retune → replan escalation engages on the next flush, and
+        record its roster device id (slot id without a roster) for the
+        session's ``take_new_liars`` drain."""
+        key = proto.group_key
+        pool = self._pools.get(key)
+        if pool is None:
+            pool = self._pools[key] = ElasticPool.from_spec(
+                proto.spec, spares=self.spares)
+        fresh = [int(s) for s in slots if pool.alive[int(s)]]
+        if not fresh:
+            return
+        pool.fail(fresh)
+        devs = (fresh if pool.device_map is None
+                else [int(pool.device_map[s]) for s in fresh])
+        self.stats["evicted_devices"] += len(devs)
+        self._new_liars.update(devs)
 
     def flush(self) -> Dict[int, np.ndarray]:
         """Serve every queued request; returns ``{rid: Y}``.
@@ -310,6 +359,35 @@ class MPCEngine:
         i_pts = vfront(a, b, keys)                     # [B, N, m/t, m/t]
         self.stats["batches"] += 1
 
+        # verified groups (spec.adversaries > 0): MAC-tag every share with
+        # ONE vmapped ``tags`` dispatch, corrupt via the injector (if any),
+        # then recompute/compare — the honesty mask localizes liars before
+        # decode ever runs (DESIGN.md §9)
+        budget = proto.spec.adversaries
+        honest_b: Optional[np.ndarray] = None
+        if budget:
+            params = [byz.mac_params(plan, r.key) for r in reqs]
+            params += [params[-1]] * pad
+            gammas = jnp.stack([pr[0] for pr in params])
+            offs = jnp.stack([pr[1] for pr in params])
+            rvecs = jnp.stack([pr[2] for pr in params])
+            vtags = plan.runner(
+                "vtags", lambda: jax.jit(jax.vmap(stages.tags)))
+            tags_b = vtags(i_pts, gammas, offs, rvecs)         # [B, N]
+            if self.injector is not None:
+                served = np.array(np.asarray(i_pts))
+                served_tags = np.array(np.asarray(tags_b))
+                for pos, req in enumerate(reqs):
+                    pts_c, tags_c = self.injector.corrupt(
+                        plan, i_pts[pos], tags_b[pos], req.rid)
+                    served[pos] = np.asarray(pts_c)
+                    served_tags[pos] = np.asarray(tags_c)
+                # decode serves what the (possibly lying) workers sent
+                i_pts = jnp.asarray(served)
+                tags_b = jnp.asarray(served_tags)
+            honest_b = np.asarray(jnp.equal(
+                vtags(i_pts, gammas, offs, rvecs), tags_b))     # [B, N]
+
         # sub-group by survivor prefix; one vmapped decode per pattern
         patterns: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for pos, req in enumerate(reqs):
@@ -321,10 +399,28 @@ class MPCEngine:
                 else:
                     mask &= req.survivors
             try:
-                idx = proto.spec.validate_survivors(mask)
+                if honest_b is None:
+                    idx = proto.spec.validate_survivors(mask)
+                else:
+                    liars = np.nonzero(mask & ~honest_b[pos])[0]
+                    if len(liars) > budget:
+                        raise AdversaryBudgetError(
+                            f"adversary budget exhausted: {len(liars)} "
+                            f"corrupted shares detected > budget "
+                            f"a={budget}", spec=proto.spec, quorum=budget,
+                            alive=int(mask.sum()), slots=liars)
+                    if len(liars):
+                        self.stats["corrections"] += len(liars)
+                        self._evict_liars(proto, liars)
+                        mask = mask & honest_b[pos]
+                    # MACs already vouched for the survivors: the plain
+                    # t²+z quorum decodes (no 2a reserve needed)
+                    idx = proto.spec.validate_survivors(
+                        mask, corrected=True)
             except RuntimeError as e:
-                # request mask ∩ pool attrition under threshold: this
-                # request fails alone, the rest of the batch is served
+                # request mask ∩ pool attrition under threshold (or over
+                # the liar budget): this request fails alone, the rest of
+                # the batch is served
                 self._fail_request(req, str(e))
                 continue
             patterns.setdefault(tuple(int(i) for i in idx), []).append(pos)

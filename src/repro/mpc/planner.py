@@ -51,6 +51,7 @@ import numpy as np
 
 from ..core.age import AGECode, GeneralizedPolyCode, optimal_age_code, polydot_code
 from ..kernels.barrett import matmul_folded, matmul_limbs, mod_p
+from .errors import MaskShapeError
 from .field import Field, acc_window
 from .lagrange import (
     ALPHA_POOL_LIMIT,
@@ -114,10 +115,15 @@ class ProtocolStages:
       survivor-mask independent (the batched engine vmaps this);
     * ``fused(a, b, key) -> y`` — all three phases with the default decode
       rows baked in (the no-dropout hot path, identical to the pre-split
-      fused runner).
+      fused runner);
+    * ``tags(i_pts, gamma, offsets, rvec) -> [N]`` — per-share field MAC
+      tags ``γ·⟨vec(I(α_n)), r⟩ + o_n mod p`` for the Byzantine-verified
+      path (DESIGN.md §9); MAC parameters are traced arguments, so one
+      compiled program serves every request key.
 
-    All six share the plan's Barrett/limb ``mm`` dispatch, so every path is
-    bit-exact for any supported prime (window contract, DESIGN.md §3).
+    All stages share the plan's Barrett/limb ``mm`` dispatch, so every
+    path is bit-exact for any supported prime (window contract,
+    DESIGN.md §3).
     """
 
     encode: Callable
@@ -126,6 +132,7 @@ class ProtocolStages:
     decode: Callable
     front: Callable
     fused: Callable
+    tags: Callable
 
 
 def _build_stages(plan: "ProtocolPlan") -> ProtocolStages:
@@ -196,10 +203,18 @@ def _build_stages(plan: "ProtocolPlan") -> ProtocolStages:
     def fused(a, b, key):
         return decode(front(a, b, key), default_idx, dec)
 
+    def tags(i_pts, gamma, offsets, rvec):
+        # γ·⟨vec(I(α_n)), r⟩ + o_n mod p (DESIGN.md §9).  The compression
+        # dot runs through the shared mm dispatch (window-safe); the final
+        # γ·v + o fits int64 for any p < 2³¹·⁵: v, γ < p ⇒ γ·v < 2⁶².
+        v = mm(jnp.asarray(i_pts, jnp.int64).reshape(n, mt * mt),
+               rvec.reshape(mt * mt, 1))[:, 0]
+        return (gamma * v + offsets) % p
+
     return ProtocolStages(
         encode=jax.jit(encode), worker_compute=jax.jit(worker_compute),
         exchange=jax.jit(exchange), decode=jax.jit(decode),
-        front=jax.jit(front), fused=jax.jit(fused))
+        front=jax.jit(front), fused=jax.jit(fused), tags=jax.jit(tags))
 
 
 @dataclasses.dataclass(eq=False)  # identity semantics (ndarray fields;
@@ -309,8 +324,9 @@ class ProtocolPlan:               # the cache's contract is `is`, not `==`)
         t2z = self.recovery_threshold
         idx = tuple(int(i) for i in idx)
         if len(idx) != t2z:
-            raise ValueError(
-                f"need exactly {t2z} survivor indices, got {len(idx)}")
+            raise MaskShapeError(
+                f"need exactly {t2z} survivor indices, got {len(idx)}",
+                quorum=t2z, alive=len(idx), slots=idx)
         if idx == tuple(range(t2z)):
             return self.decode_rows
 
@@ -348,8 +364,9 @@ class ProtocolPlan:               # the cache's contract is `is`, not `==`)
         n = self.n_workers
         idx = tuple(int(i) for i in idx)
         if len(idx) != n:
-            raise ValueError(f"need exactly N={n} quorum indices, got "
-                             f"{len(idx)}")
+            raise MaskShapeError(
+                f"need exactly N={n} quorum indices, got {len(idx)}",
+                quorum=n, alive=len(idx), slots=idx)
 
         def solve() -> np.ndarray:
             al = self.pool_alphas(pool_size)[list(idx)]

@@ -78,6 +78,11 @@ class AGECMPCProtocol:
     # the plan tables are placement-independent.
     pool: Optional[object] = None          # repro.mpc.workers.WorkerPool
     placement: Optional[tuple] = None
+    # Byzantine budget a (DESIGN.md §9): carried so spec round-trips keep
+    # the verified-quorum contract; a > 0 routes run() through the MAC-
+    # verified decode path.  Like pool/placement it never changes the plan
+    # tables — only how decode treats the shares.
+    adversaries: int = 0
 
     def __post_init__(self):
         if self.m % self.s or self.m % self.t:
@@ -91,14 +96,16 @@ class AGECMPCProtocol:
         at block side ``m`` (defaults to ``spec.m``)."""
         return cls(s=spec.s, t=spec.t, z=spec.z, m=spec._block(m),
                    lam=spec.lam, scheme=spec.scheme, field=spec.field,
-                   pool=spec.pool, placement=spec.effective_placement)
+                   pool=spec.pool, placement=spec.effective_placement,
+                   adversaries=spec.adversaries)
 
     @cached_property
     def spec(self) -> MPCSpec:
         """This instance's parameterization as the unified spec object."""
         return MPCSpec(s=self.s, t=self.t, z=self.z, lam=self.lam,
                        scheme=self.scheme, field=self.field, m=self.m,
-                       pool=self.pool, placement=self.placement)
+                       pool=self.pool, placement=self.placement,
+                       adversaries=self.adversaries)
 
     @property
     def plan_key(self) -> PlanKey:
@@ -297,6 +304,11 @@ class AGECMPCProtocol:
             return self.run_reference(a, b, key, survivors=survivors)
         if mode == "pallas":
             return self._run_pallas(a, b, key, survivors=survivors)
+        if self.adversaries:
+            # a Byzantine budget makes verification non-optional: the
+            # fused path routes through MAC check + liar-excluding decode
+            # (bit-identical to the honest run when nobody lies)
+            return self.run_verified(a, b, key, survivors=survivors)[0]
         stages = self.plan.stages()
         a = jnp.asarray(a, jnp.int64)
         b = jnp.asarray(b, jnp.int64)
@@ -306,6 +318,114 @@ class AGECMPCProtocol:
         idx_j, rows_j = self.plan.survivor_tables(tuple(idx))
         i_pts = stages.front(a, b, key)
         return stages.decode(i_pts, idx_j, rows_j)
+
+    # -------------------------------------------------- Byzantine tolerance
+    def run_verified(self, a, b, key, *,
+                     survivors: Optional[np.ndarray] = None,
+                     injector=None, round_id: int = 0):
+        """All three phases with MAC-verified decode (DESIGN.md §9).
+
+        Returns ``(y, verdict)``: ``y`` is bit-identical to the honest
+        ``run`` whenever at most ``spec.adversaries`` shares were
+        corrupted — liars are localized by their failed tags, excluded,
+        and the decode interpolates from the first ``t²+z`` honest
+        survivors (the shares are exact evaluations of one polynomial, so
+        ANY honest quorum reconstructs the same ``Y``).  ``injector``
+        (a :class:`repro.mpc.byzantine.FaultInjector`) corrupts the
+        shares/tags between tagging and verification — the worker-side
+        tamper window.  Raises
+        :class:`~repro.mpc.errors.AdversaryBudgetError` when more liars
+        are detected than the budget tolerates.
+        """
+        from . import byzantine as byz
+
+        stages = self.plan.stages()
+        i_pts = stages.front(jnp.asarray(a, jnp.int64),
+                             jnp.asarray(b, jnp.int64), key)
+        tags = byz.share_tags(self.plan, i_pts, key)
+        if injector is not None:
+            i_pts, tags = injector.corrupt(self.plan, i_pts, tags, round_id)
+        return self.verified_decode(i_pts, tags, key, survivors=survivors)
+
+    def verified_decode(self, i_points, tags, key, *,
+                        survivors: Optional[np.ndarray] = None):
+        """Check share MACs, exclude liars, decode from honest survivors.
+
+        Validates the mask at the verified quorum ``t²+z+2a`` (the ``2a``
+        slack guarantees ``t²+z`` honest survivors for up to ``a`` liars),
+        recomputes every alive slot's tag, and decodes through the plan's
+        cached survivor tables exactly like a dropout mask — a detected
+        liar and a crashed worker take the same decode path.  Returns
+        ``(y, Verdict)`` with the liar slots for the eviction machinery.
+        """
+        from . import byzantine as byz
+        from .errors import AdversaryBudgetError
+
+        spec = self.spec
+        budget = spec.adversaries
+        n = self.n_workers
+        spec.validate_survivors(survivors)       # shape + verified quorum
+        alive = (np.ones(n, bool) if survivors is None
+                 else np.asarray(survivors, bool))
+        honest = byz.check_shares(self.plan, i_points, tags, key)
+        liars = np.nonzero(alive & ~honest)[0]
+        if len(liars) > budget:
+            raise AdversaryBudgetError(
+                f"adversary budget exhausted: {len(liars)} corrupted "
+                f"shares detected > budget a={budget}",
+                spec=spec, quorum=budget, alive=int(alive.sum()),
+                slots=liars)
+        idx = spec.validate_survivors(alive & honest, corrected=True)
+        idx_j, rows_j = self.plan.survivor_tables(tuple(idx))
+        y = self.plan.stages().decode(
+            jnp.asarray(i_points, jnp.int64), idx_j, rows_j)
+        return y, byz.Verdict(liars=tuple(int(w) for w in liars),
+                              corrected=int(len(liars)),
+                              quorum=tuple(int(i) for i in idx))
+
+    def decode_corrected(self, i_points, *,
+                         survivors: Optional[np.ndarray] = None,
+                         max_errors: Optional[int] = None, seed: int = 0):
+        """Tag-free error-correcting decode (Reed–Solomon/Berlekamp–Welch).
+
+        The fallback when no MAC channel exists: compress each survivor's
+        share matrix to one scalar with a seeded random vector (a wrong
+        share maps to a wrong scalar except with probability ``1/p``),
+        locate the corrupted evaluations with
+        :func:`repro.mpc.byzantine.locate_errors` over the plan's α-set,
+        and decode from the first ``t²+z`` clean survivors.  Consumes the
+        same ``2a`` quorum slack as the verified path.  Returns
+        ``(y, liar_slots)``.
+        """
+        from . import byzantine as byz
+
+        budget = (self.spec.adversaries if max_errors is None
+                  else int(max_errors))
+        n = self.n_workers
+        t2z = self.recovery_threshold
+        p = self.field.p
+        spec = self.spec if max_errors is None else dataclasses.replace(
+            self.spec, adversaries=budget)
+        spec.validate_survivors(survivors)       # shape + t²+z+2a quorum
+        alive = (np.ones(n, bool) if survivors is None
+                 else np.asarray(survivors, bool))
+        aidx = np.nonzero(alive)[0]
+        pts = np.asarray(jnp.asarray(i_points, jnp.int64)) % p
+        flat = pts[aidx].reshape(len(aidx), -1)
+        rng = np.random.default_rng(seed)
+        from .lagrange import matmul_mod
+        rvec = rng.integers(0, p, size=flat.shape[1], dtype=np.int64)
+        comp = matmul_mod(flat, rvec.reshape(-1, 1), p)[:, 0]
+        bad = byz.locate_errors(self.field, self.plan.alphas[aidx], comp,
+                                t2z, budget)
+        liars = aidx[bad]
+        clean = alive.copy()
+        clean[liars] = False
+        idx = spec.validate_survivors(clean, corrected=True)
+        idx_j, rows_j = self.plan.survivor_tables(tuple(int(i) for i in idx))
+        y = self.plan.stages().decode(
+            jnp.asarray(i_points, jnp.int64), idx_j, rows_j)
+        return y, tuple(int(w) for w in liars)
 
     def run_reference(self, a, b, key, *,
                       survivors: Optional[np.ndarray] = None):

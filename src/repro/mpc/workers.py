@@ -219,7 +219,8 @@ class WorkerPool:
 
 
 def modeled_makespan(m: int, s: int, t: int, z: int, n: int, cost,
-                     pool: WorkerPool, placement: Sequence[int]) -> float:
+                     pool: WorkerPool, placement: Sequence[int],
+                     adversaries: int = 0) -> float:
     """Per-slot µs makespan estimate for one coded ``m×m`` block.
 
     The per-slot refinement of the ranking objective (which is the
@@ -232,11 +233,15 @@ def modeled_makespan(m: int, s: int, t: int, z: int, n: int, cost,
     is the measured-win metric of the ``hetero_tune_*`` bench pairs: under
     it, placement *ordering* matters (the quorum term), not only device
     selection.
+
+    With an adversary budget (``adversaries > 0``) the master reads the
+    wider verified quorum ``t²+z+2a`` — those extra uploads carry the
+    MAC-checked redundancy that localizes liars (DESIGN.md §9).
     """
     ov = overheads(m, s, t, z, n)
     per_worker_comm = (n - 1) * m * m / (t * t)
     upload = m * m / (t * t)
-    t2z = t * t + z
+    t2z = t * t + z + 2 * adversaries
     worst = 0.0
     for slot, dev in enumerate(placement):
         w = pool.workers[int(dev)]

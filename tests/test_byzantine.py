@@ -1,0 +1,429 @@
+"""Byzantine-robust decode (DESIGN.md §9): Berlekamp–Welch error
+location over the generalized-Vandermonde machinery, SPDZ-style share
+MACs, the adversary budget threaded spec → tuner → elastic → session,
+and seeded fault injection proving bit-exact serving under corruption."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.mpc import (
+    AdversaryBudgetError,
+    AGECMPCProtocol,
+    FaultInjector,
+    MaskShapeError,
+    MPCSpec,
+    QuorumError,
+    WorkerPool,
+    connect,
+)
+from repro.mpc import byzantine as byz
+from repro.mpc.autotune import retune_spec, search, tune
+from repro.mpc.elastic import ElasticPool
+from repro.mpc.field import Field, P_DEFAULT, P_MERSENNE31
+
+PRIMES = [P_DEFAULT, P_MERSENNE31]
+SCHEMES = ["age", "entangled", "polydot"]
+
+
+def exact_ref(a, b, p):
+    return np.array((a.astype(object).T @ b.astype(object)) % p,
+                    dtype=np.int64)
+
+
+def _spec(scheme, p, a=2, m=4):
+    return MPCSpec(s=2, t=2, z=2, m=m, scheme=scheme, field=Field(p),
+                   adversaries=a)
+
+
+# ====================================================== Berlekamp–Welch
+@pytest.mark.parametrize("p", PRIMES)
+@pytest.mark.parametrize("n_err", [0, 1, 2])
+def test_locate_errors_finds_planted_errors(p, n_err):
+    field = Field(p)
+    rng = np.random.default_rng(17 + n_err)
+    d, a = 6, 2
+    coeffs = rng.integers(0, p, d)
+    alphas = np.arange(1, d + 2 * a + 1, dtype=np.int64)
+    values = byz._poly_eval(field, coeffs, alphas)
+    planted = sorted(rng.choice(len(alphas), size=n_err, replace=False))
+    for pos in planted:
+        values[pos] = (values[pos] + int(rng.integers(1, p))) % p
+    found = byz.locate_errors(field, alphas, values, d, a)
+    assert list(found) == [int(x) for x in planted]
+
+
+def test_locate_errors_requires_quorum():
+    field = Field(P_DEFAULT)
+    with pytest.raises(QuorumError, match="points"):
+        byz.locate_errors(field, np.arange(1, 8), np.zeros(7, np.int64),
+                          degree_bound=6, max_errors=2)
+
+
+def test_locate_errors_budget_exhausted():
+    field = Field(P_DEFAULT)
+    rng = np.random.default_rng(3)
+    d, a = 4, 1
+    coeffs = rng.integers(0, field.p, d)
+    alphas = np.arange(1, d + 2 * a + 1, dtype=np.int64)
+    values = byz._poly_eval(field, coeffs, alphas)
+    for pos in (0, 2, 4):  # three liars against a budget of one
+        values[pos] = (values[pos] + 1) % field.p
+    with pytest.raises(AdversaryBudgetError, match="budget"):
+        byz.locate_errors(field, alphas, values, d, a)
+
+
+# ================================================================= MACs
+@pytest.mark.parametrize("p", PRIMES)
+def test_share_tags_localize_tampered_slots(p):
+    proto = AGECMPCProtocol.from_spec(_spec("age", p))
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, p, (4, 4))
+    b = rng.integers(0, p, (4, 4))
+    key = jax.random.PRNGKey(0)
+    i_pts = proto.plan.stages().front(
+        np.asarray(a, np.int64), np.asarray(b, np.int64), key)
+    tags = byz.share_tags(proto.plan, i_pts, key)
+    assert byz.check_shares(proto.plan, i_pts, tags, key).all()
+    pts = np.array(np.asarray(i_pts))
+    pts[5] = (pts[5] + 1) % p
+    pts[12] = (pts[12] + 3) % p
+    honest = byz.check_shares(proto.plan, pts, tags, key)
+    assert sorted(np.nonzero(~honest)[0]) == [5, 12]
+
+
+def test_tag_only_corruption_detected():
+    """A lying verifier channel (valid share, corrupted tag) is flagged
+    exactly like a corrupted share."""
+    proto = AGECMPCProtocol.from_spec(_spec("age", P_DEFAULT))
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, proto.field.p, (4, 4))
+    b = rng.integers(0, proto.field.p, (4, 4))
+    key = jax.random.PRNGKey(4)
+    inj = FaultInjector(seed=9, schedule={0: [(7, "tag")]})
+    y, verdict = proto.run_verified(a, b, key, injector=inj)
+    assert verdict.liars == (7,)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, proto.field.p))
+
+
+# ======================================================= error taxonomy
+def test_error_taxonomy_mro_and_context():
+    assert issubclass(QuorumError, RuntimeError)
+    assert issubclass(MaskShapeError, QuorumError)
+    assert issubclass(MaskShapeError, ValueError)
+    assert issubclass(AdversaryBudgetError, QuorumError)
+    spec = MPCSpec(s=2, t=2, z=2, m=4)
+    with pytest.raises(ValueError, match="shape") as ei:
+        spec.validate_survivors(np.ones(3, bool))
+    assert isinstance(ei.value, MaskShapeError)
+    bad = np.zeros(spec.n_workers, bool)
+    bad[:2] = True
+    with pytest.raises(RuntimeError, match="threshold") as ei:
+        spec.validate_survivors(bad)
+    err = ei.value
+    assert isinstance(err, QuorumError)
+    assert err.quorum == spec.recovery_threshold
+    assert err.alive == 2
+
+
+# ================================================================= spec
+def test_spec_adversaries_validation():
+    with pytest.raises(ValueError, match="adversaries"):
+        MPCSpec(s=2, t=2, z=2, m=4, adversaries=-1)
+    with pytest.raises(ValueError, match="adversaries"):
+        MPCSpec(s=2, t=2, z=2, m=4, adversaries=True)
+    # s=1,t=2,z=1: N=8 < t²+z+2a = 5+6 — the quorum contract rejects it
+    with pytest.raises(ValueError, match="t²\\+z\\+2a"):
+        MPCSpec(s=1, t=2, z=1, m=4, adversaries=3)
+
+
+def test_spec_verified_threshold_and_group_key():
+    spec0 = MPCSpec(s=2, t=2, z=2, m=4)
+    spec2 = dataclasses.replace(spec0, adversaries=2)
+    assert spec0.verified_threshold == spec0.recovery_threshold
+    assert spec2.verified_threshold == spec2.recovery_threshold + 4
+    # a=0 keeps the legacy group key bit-for-bit; a>0 isolates the group
+    assert spec0.group_key() == MPCSpec(s=2, t=2, z=2, m=4).group_key()
+    assert spec0.group_key() != spec2.group_key()
+    assert ("byz", 2) in spec2.group_key()
+    # the plan itself is independent of a: same tables, same compiles
+    assert (AGECMPCProtocol.from_spec(spec2).plan
+            is AGECMPCProtocol.from_spec(spec0).plan)
+
+
+def test_spec_adversaries_survive_protocol_roundtrip():
+    spec = MPCSpec(s=2, t=2, z=2, m=4, adversaries=2)
+    proto = AGECMPCProtocol.from_spec(spec)
+    assert proto.adversaries == 2
+    assert proto.spec.adversaries == 2
+    assert proto.group_key == spec.group_key()
+
+
+def test_validate_survivors_verified_quorum():
+    spec = MPCSpec(s=2, t=2, z=2, m=4, adversaries=2)
+    mask = np.zeros(spec.n_workers, bool)
+    mask[: spec.verified_threshold - 1] = True  # 9 < 10
+    with pytest.raises(QuorumError, match="threshold"):
+        spec.validate_survivors(mask)
+    # the same mask clears the plain t²+z bar once MACs vouched for it
+    idx = spec.validate_survivors(mask, corrected=True)
+    assert len(idx) == spec.recovery_threshold
+
+
+# ==================================== verified run: the property sweep
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("p", PRIMES)
+def test_run_verified_bit_identical_under_corruption(scheme, p):
+    """Up to ``a`` corrupted shares: detection, exact liar localization,
+    and bit-identical output vs the honest run — schemes × primes."""
+    spec = _spec(scheme, p)
+    proto = AGECMPCProtocol.from_spec(spec)
+    rng = np.random.default_rng(hash((scheme, p)) % 2**32)
+    a = rng.integers(0, p, (4, 4))
+    b = rng.integers(0, p, (4, 4))
+    key = jax.random.PRNGKey(1)
+    honest = proto.run(a, b, key)
+    np.testing.assert_array_equal(np.asarray(honest), exact_ref(a, b, p))
+    for liars in ([3], [1, proto.n_workers - 1]):
+        inj = FaultInjector(
+            seed=13, schedule={0: [(s, "tamper") for s in liars]})
+        y, verdict = proto.run_verified(a, b, key, injector=inj)
+        assert sorted(verdict.liars) == liars
+        assert verdict.corrected == len(liars)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(honest))
+
+
+@pytest.mark.parametrize("mode", ["tamper", "flip", "stale"])
+def test_run_verified_under_survivor_mask_and_mode(mode):
+    """Crash dropout and active corruption compose: kill 2a workers, lie
+    on ``a`` of the rest, still decode the exact product."""
+    spec = _spec("age", P_DEFAULT)
+    proto = AGECMPCProtocol.from_spec(spec)
+    rng = np.random.default_rng(23)
+    a = rng.integers(0, spec.field.p, (4, 4))
+    b = rng.integers(0, spec.field.p, (4, 4))
+    key = jax.random.PRNGKey(2)
+    mask = np.ones(proto.n_workers, bool)
+    mask[[0, 6, 10, 16]] = False          # crashes (N=17, verified=10)
+    inj = FaultInjector(seed=7, schedule={5: [(2, mode), (9, mode)]})
+    y, verdict = proto.run_verified(a, b, key, survivors=mask,
+                                    injector=inj, round_id=5)
+    assert sorted(verdict.liars) == [2, 9]
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, spec.field.p))
+
+
+def test_run_verified_budget_exhausted():
+    spec = _spec("age", P_DEFAULT)
+    proto = AGECMPCProtocol.from_spec(spec)
+    a = np.ones((4, 4), np.int64)
+    inj = FaultInjector(
+        seed=1, schedule={0: [(1, "tamper"), (4, "tamper"), (8, "flip")]})
+    with pytest.raises(AdversaryBudgetError, match="budget"):
+        proto.run_verified(a, a, jax.random.PRNGKey(0), injector=inj)
+
+
+def test_run_routes_to_verified_path():
+    """``run`` on an adversarial spec verifies by default — same output,
+    no API change for callers."""
+    spec = _spec("age", P_DEFAULT)
+    proto = AGECMPCProtocol.from_spec(spec)
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, spec.field.p, (4, 4))
+    b = rng.integers(0, spec.field.p, (4, 4))
+    y = proto.run(a, b, jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  exact_ref(a, b, spec.field.p))
+
+
+# ================================================ tag-free BW fallback
+@pytest.mark.parametrize("p", PRIMES)
+def test_decode_corrected_locates_and_repairs(p):
+    spec = _spec("age", p)
+    proto = AGECMPCProtocol.from_spec(spec)
+    rng = np.random.default_rng(31)
+    a = rng.integers(0, p, (4, 4))
+    b = rng.integers(0, p, (4, 4))
+    key = jax.random.PRNGKey(9)
+    i_pts = np.array(np.asarray(proto.plan.stages().front(
+        np.asarray(a, np.int64), np.asarray(b, np.int64), key)))
+    i_pts[4] = (i_pts[4] + 7) % p
+    i_pts[11] = (i_pts[11] ^ 1) % p
+    y, liars = proto.decode_corrected(i_pts)
+    assert sorted(int(s) for s in liars) == [4, 11]
+    np.testing.assert_array_equal(np.asarray(y), exact_ref(a, b, p))
+
+
+# ======================================================= fault injector
+def test_injector_scripted_schedule_is_deterministic():
+    plan = AGECMPCProtocol(s=2, t=2, z=2, m=4).plan
+    pts = np.zeros((plan.n_workers, 2, 2), np.int64)
+    tags = np.zeros(plan.n_workers, np.int64)
+    outs = []
+    for _ in range(2):
+        inj = FaultInjector(seed=42, schedule={1: [(3, "tamper")]},
+                            rate=0.2, slots=[0, 1, 2])
+        c_pts, c_tags = inj.corrupt(plan, pts, tags, 1)
+        outs.append((np.asarray(c_pts).copy(), list(inj.log)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+    assert (1, 3, "tamper") in outs[0][1]
+    assert all(slot in (0, 1, 2, 3) for _, slot, _ in outs[0][1])
+
+
+def test_injector_stale_mode_replays_previous_round():
+    plan = AGECMPCProtocol(s=2, t=2, z=2, m=4).plan
+    n = plan.n_workers
+    inj = FaultInjector(seed=0, schedule={1: [(2, "stale")]})
+    first = np.arange(n * 4, dtype=np.int64).reshape(n, 2, 2) % plan.p
+    inj.corrupt(plan, first, np.zeros(n, np.int64), 0)
+    second = (first + 100) % plan.p
+    c_pts, _ = inj.corrupt(plan, second, np.zeros(n, np.int64), 1)
+    np.testing.assert_array_equal(np.asarray(c_pts)[2], first[2])
+    assert inj.applied(1) == [(1, 2, "stale")]
+
+
+def test_injector_validates_inputs():
+    with pytest.raises(ValueError, match="mode"):
+        FaultInjector(mode="gamma-ray")
+    with pytest.raises(ValueError, match="rate"):
+        FaultInjector(rate=1.5)
+    with pytest.raises(ValueError, match="mode"):
+        FaultInjector(schedule={0: [(1, "nope")]})
+
+
+# ============================================================= autotune
+def test_tune_carries_adversary_budget():
+    res = tune(24, 2, (16, 16, 16), adversaries=2)
+    spec = res.spec
+    assert spec.adversaries == 2
+    assert spec.n_workers >= spec.t * spec.t + spec.z + 4
+    with pytest.raises(ValueError, match="a=9"):
+        tune(8, 2, (16, 16, 16), adversaries=9)
+
+
+def test_search_filters_verified_infeasible_candidates():
+    plain = {(c.scheme, c.s, c.t) for c in search(12, 2, (8, 8, 8))}
+    tight = {(c.scheme, c.s, c.t)
+             for c in search(12, 2, (8, 8, 8), adversaries=2)}
+    assert tight <= plain
+    for c in search(12, 2, (8, 8, 8), adversaries=2):
+        assert c.n_workers >= c.t * c.t + 2 + 4
+
+
+def test_retune_spec_carries_adversary_budget():
+    spec = retune_spec(20, 2, m=8, adversaries=2)
+    assert spec is not None and spec.adversaries == 2
+    assert spec.n_workers >= spec.t * spec.t + spec.z + 4
+
+
+# ============================================================== elastic
+def test_elastic_pool_reserves_2a_of_phase3_tolerance():
+    spec = MPCSpec(s=2, t=2, z=2, m=4)
+    base = ElasticPool.from_spec(spec)
+    guarded = ElasticPool.from_spec(
+        dataclasses.replace(spec, adversaries=2))
+    assert guarded.phase3_tolerance() == base.phase3_tolerance() - 4
+    assert guarded.spec.adversaries == 2
+
+
+def test_elastic_replan_respects_verified_quorum():
+    # 11 alive: crash-wise (s=1,t=2) (N=11) fits, but every candidate's
+    # N falls short of its own t²+z+2a at a=3 — the 2a reserve bites
+    pool3 = ElasticPool.from_spec(
+        MPCSpec(s=2, t=2, z=2, m=8, adversaries=3), spares=0)
+    pool3.fail(list(range(6)))
+    assert pool3.replan() is None
+    pool0 = ElasticPool.from_spec(MPCSpec(s=2, t=2, z=2, m=8), spares=0)
+    pool0.fail(list(range(6)))
+    assert pool0.replan() is not None  # same attrition, no budget: fine
+    # a=2: (s=2,t=1) (N=7 ≥ 1+2+4) serves the 8 survivors, budget kept
+    pool2 = ElasticPool.from_spec(
+        MPCSpec(s=2, t=2, z=2, m=8, adversaries=2), spares=0)
+    pool2.fail(list(range(9)))
+    new = pool2.replan()
+    assert new is not None
+    assert new.adversaries == 2
+    assert new.n_workers >= new.t * new.t + 2 + 4
+
+
+def test_elastic_active_subset_raises_quorum_error():
+    pool = ElasticPool.from_spec(MPCSpec(s=2, t=2, z=2, m=4), spares=0)
+    pool.fail(list(range(3)))
+    with pytest.raises(QuorumError, match="re-plan required") as ei:
+        pool.active_subset()
+    assert ei.value.alive == pool.proto.n_workers - 3
+
+
+# ============================================================== session
+def _session_roundtrip(backend, spec, sched):
+    rng = np.random.default_rng(77)
+    a = rng.integers(0, spec.field.p, (8, 8))
+    b = rng.integers(0, spec.field.p, (8, 8))
+    # session semantics: a @ b (the protocol's AᵀB is per coded block)
+    ref = np.array((a.astype(object) @ b.astype(object)) % spec.field.p,
+                   dtype=np.int64)
+    inj = FaultInjector(seed=5, schedule=sched)
+    sess = connect(spec, backend=backend, injector=inj)
+    out = sess.matmul(a, b, encoded=True)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    return sess, inj, ref, (a, b)
+
+
+@pytest.mark.parametrize("backend", ["local", "batched"])
+def test_session_serves_exactly_under_scripted_corruption(backend):
+    spec = MPCSpec(s=2, t=2, z=2, m=4, adversaries=2)
+    sched = {r: [(3, "tamper"), (9, "flip")] for r in range(64)}
+    sess, inj, ref, (a, b) = _session_roundtrip(backend, spec, sched)
+    # every detected liar was corrected and both slots evicted once
+    assert sess.stats["corrections"] == len(inj.log)
+    assert sess.stats["evicted_devices"] == 2
+    assert sess._dead == {3, 9}
+    # the evicted slots fold into later masks: serving continues exactly
+    out2 = sess.matmul(a, b, encoded=True)
+    np.testing.assert_array_equal(np.asarray(out2), ref)
+    assert sess.stats["evicted_devices"] == 2
+
+
+def test_session_local_budget_exhausted_is_isolated():
+    spec = MPCSpec(s=2, t=2, z=2, m=4, adversaries=1)
+    inj = FaultInjector(seed=2,
+                        schedule={0: [(0, "tamper"), (5, "tamper")]})
+    sess = connect(spec, backend="local", injector=inj)
+    a = np.ones((4, 4), np.int64)
+    with pytest.raises(RuntimeError, match="budget"):
+        sess.matmul(a, a, encoded=True)
+    # the next (clean) round serves fine — failure never sticks
+    out = sess.matmul(a, a, encoded=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  exact_ref(a, a, spec.field.p))
+
+
+def test_session_pool_spec_evicts_roster_device_ids():
+    """Liar slots surface as roster DEVICE ids (slot→device translation
+    through the placement), so eviction composes with spares/retune."""
+    roster = WorkerPool.homogeneous(20)
+    spec = MPCSpec(s=2, t=2, z=2, m=4, adversaries=1, pool=roster,
+                   placement=tuple(range(19, 2, -1)))  # slot i → dev 19-i
+    inj = FaultInjector(seed=3, schedule={0: [(4, "tamper")]})
+    sess = connect(spec, backend="local", injector=inj)
+    rng = np.random.default_rng(8)
+    a = rng.integers(0, spec.field.p, (4, 4))
+    b = rng.integers(0, spec.field.p, (4, 4))
+    out = sess.matmul(a, b, encoded=True)
+    want = np.array((a.astype(object) @ b.astype(object)) % spec.field.p,
+                    dtype=np.int64)
+    np.testing.assert_array_equal(np.asarray(out), want)
+    assert sess._dead == {15}  # device behind slot 4, not the slot id
+    assert sess.stats["evicted_devices"] == 1
+
+
+def test_sharded_backend_rejects_verification():
+    spec = MPCSpec(s=2, t=2, z=2, m=4, adversaries=1)
+    with pytest.raises(ValueError, match="sharded"):
+        connect(spec, backend="sharded", mesh=None)
+    with pytest.raises(ValueError, match="sharded"):
+        connect(MPCSpec(s=2, t=2, z=2, m=4), backend="sharded",
+                mesh=None, injector=FaultInjector())

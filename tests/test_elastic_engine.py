@@ -415,3 +415,97 @@ def test_engine_validates_submit_masks():
     with pytest.raises(RuntimeError, match="threshold"):
         eng.submit(a, a, key=jax.random.PRNGKey(0), s=2, t=2, z=2, m=8,
                    survivors=bad)
+
+
+# ----------------------------------------------------- byzantine serving
+def test_engine_verified_flush_pins_counters_under_tamper_schedule():
+    """Scripted corruption through the batched engine: every output
+    bit-identical to the honest flush, counters pinned to the schedule,
+    liar slots drained for the session's eviction path."""
+    from repro.mpc import FaultInjector, MPCSpec
+
+    spec = MPCSpec(s=2, t=2, z=2, m=8, adversaries=2)
+    rng = np.random.default_rng(12)
+    p = spec.field.p
+    ops = [(rng.integers(0, p, (8, 8)), rng.integers(0, p, (8, 8)))
+           for _ in range(3)]
+
+    honest = MPCEngine()
+    want = {}
+    for i, (a, b) in enumerate(ops):
+        rid = honest.submit(a, b, key=jax.random.PRNGKey(i), spec=spec)
+        want[rid] = exact_ref(a, b, p)
+    clean = honest.flush()
+    assert honest.stats["corrections"] == 0
+
+    # rid 0: one tamper; rid 1: tamper + tag lie; rid 2: clean
+    sched = {0: [(3, "tamper")], 1: [(3, "tamper"), (9, "tag")]}
+    eng = MPCEngine(injector=FaultInjector(seed=4, schedule=sched))
+    rids = [eng.submit(a, b, key=jax.random.PRNGKey(i), spec=spec)
+            for i, (a, b) in enumerate(ops)]
+    results = eng.flush()
+    for rid in rids:
+        np.testing.assert_array_equal(np.asarray(results[rid]),
+                                      want[rid], err_msg=f"request {rid}")
+        np.testing.assert_array_equal(np.asarray(results[rid]),
+                                      np.asarray(clean[rid]))
+    assert eng.stats["corrections"] == 3       # exactly the schedule
+    assert eng.stats["evicted_devices"] == 2   # slots 3 and 9, once each
+    assert eng.take_new_liars() == {3, 9}
+    assert eng.take_new_liars() == set()       # drained
+    assert "vtags" in AGECMPCProtocol.from_spec(spec).plan._runners
+
+
+def test_engine_budget_exhausted_fails_alone():
+    from repro.mpc import FaultInjector, MPCSpec
+
+    spec = MPCSpec(s=2, t=2, z=2, m=8, adversaries=1)
+    rng = np.random.default_rng(14)
+    p = spec.field.p
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    sched = {1: [(2, "tamper"), (7, "tamper")]}   # two liars, budget one
+    eng = MPCEngine(injector=FaultInjector(seed=6, schedule=sched))
+    rid_ok = eng.submit(a, b, key=jax.random.PRNGKey(0), spec=spec)
+    rid_bad = eng.submit(a, b, key=jax.random.PRNGKey(1), spec=spec)
+    results = eng.flush()
+    np.testing.assert_array_equal(np.asarray(results[rid_ok]),
+                                  exact_ref(a, b, p))
+    assert rid_bad not in results
+    assert "budget" in eng.failures[rid_bad]
+    assert eng.stats["failed"] == 1
+    # over-budget detection corrects nothing and evicts nobody
+    assert eng.stats["corrections"] == 0
+    assert eng.stats["evicted_devices"] == 0
+
+
+def test_engine_liar_eviction_escalates_like_attrition():
+    """Evicted liars drain the pool exactly like crashes: once below N
+    the group re-tunes/replans (budget carried) and keeps serving."""
+    from repro.mpc import FaultInjector, MPCSpec
+
+    spec = MPCSpec(s=2, t=2, z=2, m=8, adversaries=2)
+    n = spec.n_workers
+    rng = np.random.default_rng(15)
+    p = spec.field.p
+    a = rng.integers(0, p, (8, 8))
+    b = rng.integers(0, p, (8, 8))
+    want = exact_ref(a, b, p)
+    sched = {0: [(1, "tamper"), (5, "tamper")]}
+    eng = MPCEngine(spares=1,
+                    injector=FaultInjector(seed=8, schedule=sched))
+    r0 = eng.submit(a, b, key=jax.random.PRNGKey(0), spec=spec)
+    res = eng.flush()
+    np.testing.assert_array_equal(np.asarray(res[r0]), want)
+    key = AGECMPCProtocol.from_spec(spec).group_key
+    pool = eng._pools[key]
+    assert int(pool.alive.sum()) == n + 1 - 2  # both liars gone
+    assert eng.stats["evicted_devices"] == 2
+    assert eng.stats["replans"] == 0
+    # spares=1: two evictions leave the pool below N, so the next flush
+    # escalates (budget carried into the re-tuned spec) and still serves
+    r1 = eng.submit(a, b, key=jax.random.PRNGKey(1), spec=spec)
+    res = eng.flush()
+    np.testing.assert_array_equal(np.asarray(res[r1]), want)
+    assert eng.stats["replans"] == 1
+    assert eng._replans[key].adversaries == 2
