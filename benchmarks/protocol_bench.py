@@ -147,6 +147,7 @@ def main():
     hetero_pairs(records)
     sharded_pairs(records)
     byzantine_pairs(records)
+    cbatch_pairs(records)
     write_trajectory("PROTOCOL", records)
 
 
@@ -392,6 +393,94 @@ def sharded_pairs(records, *, quick: bool = False):
               f"{blocks[0]}/{blocks[1]}")
 
 
+def cbatch_pairs(records, *, quick: bool = False):
+    """Continuous-admission pairs (DESIGN.md §10), two families:
+
+    * ``engine_cbatch*_m*`` — the wave-admission engine (adaptive width:
+      compute-bound groups degrade to the fused width-1 path, tails split
+      exactly) vs the legacy fixed-width wave flush
+      (``wave_scalars=None``) on the same compute-bound batch.  This is
+      the regression that had ``engine_batch16_m144`` at 0.75x: monolithic
+      vmapped waves lose to the fused program once blocks are large.
+    * ``serve_paged_mixed*`` — the paged continuous-batching scheduler
+      serving a mixed-length prompt burst vs the seed one-shot loop run
+      per request (its only option when lengths differ, since the static
+      slab pads every row to the worst case).  Tokens are asserted
+      bit-identical before timing; the derived column records the paged
+      pool's peak footprint vs the static worst-case block count.
+    """
+    import jax
+    import numpy as np
+
+    from repro.mpc.engine import MPCEngine
+
+    s, t, z = 2, 2, 2
+    em, bs = (144, 2) if quick else (144, 16)
+    proto = AGECMPCProtocol(s=s, t=t, z=z, m=em)
+    rng = np.random.default_rng(11)
+    reqs = [(rng.integers(0, proto.field.p, (em, em)),
+             rng.integers(0, proto.field.p, (em, em)),
+             jax.random.PRNGKey(i)) for i in range(bs)]
+    adaptive = MPCEngine(max_batch=16)
+    legacy = MPCEngine(max_batch=16, wave_scalars=None)
+
+    def flush_through(eng):
+        rids = [eng.submit(a, b, key=k, s=s, t=t, z=z, m=em)
+                for a, b, k in reqs]
+        res = eng.flush()
+        return [np.asarray(res[r]) for r in rids]
+
+    ys_new = flush_through(adaptive)
+    ys_old = flush_through(legacy)
+    assert all(np.array_equal(n, o) for n, o in zip(ys_new, ys_old)), \
+        "wave-admission flush diverged from legacy waves"
+    iters, best_of = (2, 1) if quick else (3, 2)
+    us_new = time_us(flush_through, adaptive, iters=iters, warmup=0,
+                     best_of=best_of)
+    us_old = time_us(flush_through, legacy, iters=iters, warmup=0,
+                     best_of=best_of)
+    emit_pair(records, f"engine_cbatch{bs}_m{em}", us_new, us_old,
+              f"adaptive-width-vs-wave{legacy.max_batch};"
+              f"waves={adaptive.stats['waves']}")
+
+    # ---- paged continuous serving vs per-request seed loops --------------
+    from repro.configs import get_config, reduced
+    from repro.models.api import get_model
+    from repro.serve import Engine
+
+    cfg = reduced(get_config("llama3.2-1b"))
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    srv = Engine(cfg, params, block_size=8)
+    lengths = [24, 4, 8, 6] if quick else [24, 4, 8, 6, 12, 4, 16, 5]
+    max_new = 4 if quick else 8
+    prompts = [jax.random.randint(jax.random.PRNGKey(100 + i), (1, t),
+                                  0, cfg.vocab) for i, t in enumerate(lengths)]
+    max_len = max(lengths) + max_new - 1
+
+    def continuous():
+        sched = srv.make_scheduler(lanes=4, max_len=max_len)
+        rids = [sched.submit(p, max_new) for p in prompts]
+        done = sched.run()
+        return [done[r] for r in rids], sched
+
+    def sequential():
+        return [np.asarray(srv._generate_legacy(p, max_new))[0]
+                for p in prompts]
+
+    got, sched = continuous()
+    want = sequential()
+    assert all(np.array_equal(g, w) for g, w in zip(got, want)), \
+        "paged serving diverged from the seed loop"
+    static_blocks = 4 * sched.alloc.blocks_for(max_len)
+    us_paged = time_us(lambda: continuous()[0], iters=iters, warmup=0,
+                       best_of=best_of)
+    us_seq = time_us(sequential, iters=iters, warmup=0, best_of=best_of)
+    emit_pair(records, f"serve_paged_mixed{len(lengths)}", us_paged, us_seq,
+              f"peak_blocks={sched.alloc.stats['peak_used']}/"
+              f"static={static_blocks};max_new={max_new}")
+
+
 def smoke():
     """Fast CI leg: fused + survivor + batched-engine + autotuned-session
     paths must produce exact products at reduced m.  Quick-mode
@@ -448,6 +537,7 @@ def smoke():
     autotune_pairs(auto_records, quick=True)
     hetero_pairs(auto_records, quick=True)
     byzantine_pairs(auto_records, quick=True)
+    cbatch_pairs(auto_records, quick=True)
     write_trajectory("PROTOCOL", auto_records)
 
     print(f"protocol smoke OK: fused, survivor, engine batch of {len(rids)} "

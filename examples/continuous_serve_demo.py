@@ -1,0 +1,74 @@
+"""Continuous serving demo (DESIGN.md §10): mixed-length prompts arriving
+over time, admitted into in-flight decode over a paged KV pool.
+
+Three things to watch:
+
+* requests join *between* decode steps — nobody waits for the batch to
+  drain (``admitted_inflight`` in the scheduler stats);
+* the paged pool only ever holds what admitted requests actually use —
+  the static slab the seed engine would allocate for the same lane count
+  is strictly larger (``peak_blocks`` vs ``static_blocks``);
+* every request's tokens are bit-identical to the seed one-shot greedy
+  loop run on its own.
+
+    PYTHONPATH=src python examples/continuous_serve_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.models.api import get_model  # noqa: E402
+from repro.serve import Engine  # noqa: E402
+
+cfg = reduced(get_config("llama3.2-1b"))
+model = get_model(cfg)
+params = model.init_params(cfg, jax.random.PRNGKey(0))
+engine = Engine(cfg, params, block_size=4)
+
+MAX_LEN = 32
+# 13 usable blocks — well under the 3-lane × 8-block worst case, so the
+# demo actually exercises recycling and admission back-pressure
+sched = engine.make_scheduler(lanes=3, n_blocks=14, max_len=MAX_LEN)
+
+# a bursty arrival pattern: (arrive_at_step, prompt_len, max_new)
+ARRIVALS = [(0, 26, 6), (0, 4, 10), (1, 7, 4), (3, 5, 8), (5, 12, 5),
+            (6, 3, 6)]
+
+
+def prompt_for(i, t):
+    return jax.random.randint(jax.random.PRNGKey(10 + i), (1, t), 0,
+                              cfg.vocab)
+
+
+rids, queued, step = {}, list(enumerate(ARRIVALS)), 0
+while True:
+    while queued and queued[0][1][0] <= step:
+        i, (_, t, mn) = queued.pop(0)
+        rids[sched.submit(prompt_for(i, t), mn)] = (i, t, mn)
+        print(f"step {step:2d}: request {i} arrives (len={t}, max_new={mn}; "
+              f"{sched.active()} in flight, {sched.alloc.used_blocks()} "
+              f"blocks used)")
+    more = sched.step()
+    step += 1
+    if not more and not queued:
+        break
+
+done = sched.finished
+for rid, (i, t, mn) in sorted(rids.items()):
+    seed = np.asarray(engine._generate_legacy(prompt_for(i, t), mn))[0]
+    assert np.array_equal(done[rid], seed), f"request {i} diverged"
+
+static_blocks = sched.lanes * sched.alloc.blocks_for(MAX_LEN)
+peak = sched.alloc.stats["peak_used"]
+assert peak < static_blocks, "paging should beat worst-case preallocation"
+assert sched.stats["admitted_inflight"] >= 1
+assert sched.alloc.stats["recycled"] >= 1      # retired blocks reused
+print(f"served {len(rids)} mixed-length requests in {sched.stats['steps']} "
+      f"decode steps over {sched.lanes} lanes")
+print(f"paged footprint: peak {peak} blocks vs static worst-case "
+      f"{static_blocks}; scheduler stats {sched.stats}")
+print("continuous serving OK: all requests bit-identical to the seed loop")

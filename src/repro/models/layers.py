@@ -192,6 +192,72 @@ def decode_attention(q, cache: KVCache, k_new, v_new, *, pos):
     return out, new_cache
 
 
+# ---------------------------------------------------------- paged KV cache --
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-pooled KV storage (DESIGN.md §10): fixed-size blocks shared by
+    every lane of a serving batch, indexed through per-lane block tables.
+
+    ``k``/``v``: [L?, n_blocks, block_size, Hkv, D].  A lane's logical
+    sequence is the concatenation of its table's blocks; which blocks a
+    lane owns lives OUTSIDE the pytree (the serve scheduler's
+    :class:`~repro.serve.paging.BlockAllocator`), so admissions and
+    retirements never change any traced shape.  Block 0 is reserved as the
+    null block — idle lanes park their writes there.
+    """
+    k: jax.Array
+    v: jax.Array
+
+    @staticmethod
+    def init(n_blocks: int, block_size: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16, leading: tuple = ()):
+        shape = (*leading, n_blocks, block_size, n_kv, head_dim)
+        return PagedKVCache(k=jnp.zeros(shape, dtype),
+                            v=jnp.zeros(shape, dtype))
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache, data_fields=["k", "v"], meta_fields=[])
+
+
+def paged_decode_attention(q, k_pool, v_pool, tables, k_new, v_new, *, pos):
+    """One-token decode over a paged pool — the block-table twin of
+    :func:`decode_attention`, bit-identical per lane.
+
+    q: [B, 1, Hq, D]; k_pool/v_pool: [NB, BS, Hkv, D] (one layer's pool);
+    tables: [B, MB] int32 block ids; k_new/v_new: [B, 1, Hkv, D];
+    pos: [B] int32 — each lane's own write/attend position (lanes advance
+    independently under continuous batching).  Positions past ``pos`` are
+    masked to exact softmax zeros, so recycled-block garbage and pool
+    padding never perturb the output: the result matches the contiguous
+    path bit for bit.  Returns ``(out [B,1,Hq,D], k_pool, v_pool)``.
+    """
+    b, _, hq, d = q.shape
+    bs = k_pool.shape[1]
+    hkv = k_new.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    lane = jnp.arange(b)
+    blk = tables[lane, pos // bs]                       # [B]
+    off = pos % bs
+    k_pool = k_pool.at[blk, off].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new[:, 0].astype(v_pool.dtype))
+    k = k_pool[tables].reshape(b, -1, hkv, d)           # [B, MB*BS, Hkv, D]
+    v = v_pool[tables].reshape(b, -1, hkv, d)
+    k = shard(k, "batch", "seq_kv", "kv_heads", None)
+    v = shard(v, "batch", "seq_kv", "kv_heads", None)
+    kr, vr = _gqa_repeat(k, hq // hkv), _gqa_repeat(v, hq // hkv)
+    logits = jnp.einsum("bthd,bshd->bhts", q, kr) / jnp.sqrt(d).astype(q.dtype)
+    logits = logits.astype(jnp.float32)
+    logits = shard(logits, "batch", None, None, "seq_kv")
+    valid = (jnp.arange(k.shape[1])[None, None, None, :]
+             <= pos[:, None, None, None])
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    probs = shard(probs, "batch", None, None, "seq_kv")
+    out = jnp.einsum("bhts,bshd->bthd", probs, vr)
+    return out, k_pool, v_pool
+
+
 # ------------------------------------------------------------------ MLPs --
 def swiglu(x, w1, w3, w2):
     """SwiGLU FFN; w1,w3: [D, F], w2: [F, D]."""

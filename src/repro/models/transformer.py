@@ -16,9 +16,11 @@ from ..parallel.sharding import shard
 from .config import ModelConfig
 from .layers import (
     KVCache,
+    PagedKVCache,
     attention_chunked,
     decode_attention,
     gqa_project,
+    paged_decode_attention,
     rms_norm,
     swiglu,
 )
@@ -233,3 +235,47 @@ def decode_step(cfg: ModelConfig, params: dict, cache: KVCache,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_fn(cfg, params, x)
     return logits, KVCache(k=new_k, v=new_v, length=cache.length + 1)
+
+
+def init_paged_cache(cfg: ModelConfig, n_blocks: int,
+                     block_size: int) -> PagedKVCache:
+    """Stacked [L, NB, BS, Hkv, hd] block pool (DESIGN.md §10)."""
+    return PagedKVCache.init(n_blocks, block_size, cfg.n_kv_heads,
+                             cfg.resolved_head_dim, _dtype(cfg),
+                             leading=(cfg.n_layers,))
+
+
+def decode_step_paged(cfg: ModelConfig, params: dict, pool: PagedKVCache,
+                      tables: jax.Array, token: jax.Array, pos: jax.Array):
+    """One decode step over the paged pool — the continuous-batching twin
+    of :func:`decode_step`.  token: [B, 1] int32; tables: [B, MB] int32;
+    pos: [B] int32 per-lane positions (lanes decode independently).
+
+    Returns (logits [B, 1, Vp], new pool).  Per lane the math is
+    bit-identical to the contiguous path: only the KV storage layout and
+    the per-lane (instead of scalar) position differ."""
+    x = params["embed"][token]
+    x = shard(x, "batch", None, "embed")
+    b = x.shape[0]
+    positions = jnp.asarray(pos, jnp.int32)[:, None]    # [B, 1]
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = gqa_project(h, lp, cfg, positions=positions)
+        attn, nk, nv = paged_decode_attention(
+            q, kc, vc, tables, k_new, v_new, pos=pos)
+        attn = attn.reshape(b, 1, -1) @ lp["w_o"]
+        x = x + attn
+        h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+        if cfg.moe is not None:
+            ffn, _ = moe_ffn(h, lp, cfg.moe)
+        else:
+            ffn = swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+        return x + ffn, (nk, nv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], pool.k, pool.v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, params, x)
+    return logits, PagedKVCache(k=new_k, v=new_v)

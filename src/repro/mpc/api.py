@@ -396,7 +396,8 @@ class MPCSession:
         self.failures: Dict[int, str] = {}
         self.stats = {"matmuls": 0, "blocks": 0, "flushes": 0,
                       "retiles": 0, "masks_dropped": 0,
-                      "corrections": 0, "evicted_devices": 0}
+                      "corrections": 0, "evicted_devices": 0,
+                      "waves": 0, "padded_lanes": 0, "deferred_groups": 0}
 
     # ------------------------------------------------------------- helpers
     def validate_survivors(self, survivors) -> np.ndarray:
@@ -429,6 +430,11 @@ class MPCSession:
         backend already speaks device ids) and slot ids otherwise, so
         spares/retune/replan escalation engages identically to a crash.
         """
+        sched = getattr(self.backend, "scheduler_stats", None)
+        if sched is not None:  # wave-admission counters (DESIGN.md §10)
+            s = sched()
+            for k in ("waves", "padded_lanes", "deferred_groups"):
+                self.stats[k] = int(s.get(k, 0))
         counters = getattr(self.backend, "byzantine_stats", None)
         if counters is None:
             return

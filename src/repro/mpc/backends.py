@@ -31,6 +31,8 @@ from .api import BlockFailure, BlockOp
 
 BlockResult = Union[Any, BlockFailure]  # a field-domain array, or a failure
 
+_UNSET = object()  # "keep the engine's default" sentinel for wave knobs
+
 
 class MPCBackend:
     """Backend interface: run blocks, optionally own attrition handling."""
@@ -65,6 +67,13 @@ class MPCBackend:
         corrected out of a decode and distinct workers evicted as liars.
         Backends without a verified path report zeros."""
         return {"corrections": 0, "evicted_devices": 0}
+
+    def scheduler_stats(self) -> Dict[str, int]:
+        """Cumulative wave-admission counters (DESIGN.md §10): serving
+        waves dispatched, padded lanes burned, degraded groups deferred
+        behind healthy traffic.  Backends without wave machinery report
+        zeros."""
+        return {"waves": 0, "padded_lanes": 0, "deferred_groups": 0}
 
     def take_new_liars(self) -> set:
         """Drain liar ids caught since the last call — roster device ids
@@ -189,14 +198,24 @@ class BatchedBackend(MPCBackend):
     handles_attrition = True
 
     def __init__(self, *, spares: int = 2, max_batch: int = 64, engine=None,
-                 cost=None, injector=None):
+                 cost=None, injector=None, wave_scalars=_UNSET,
+                 inflight=None):
         from .engine import MPCEngine
 
-        self.engine = engine if engine is not None else MPCEngine(
-            spares=spares, max_batch=max_batch, cost=cost,
-            injector=injector)
-        if engine is not None and injector is not None:
-            self.engine.injector = injector
+        if engine is None:
+            kw = {} if wave_scalars is _UNSET else dict(
+                wave_scalars=wave_scalars)
+            engine = MPCEngine(spares=spares, max_batch=max_batch,
+                               cost=cost, injector=injector,
+                               inflight=inflight, **kw)
+        else:
+            if injector is not None:
+                engine.injector = injector
+            if wave_scalars is not _UNSET:
+                engine.wave_scalars = wave_scalars
+            if inflight is not None:
+                engine.inflight = inflight
+        self.engine = engine
         self._dead: frozenset = frozenset()
 
     def fail(self, dead: frozenset) -> None:
@@ -204,6 +223,11 @@ class BatchedBackend(MPCBackend):
 
     def byzantine_stats(self) -> Dict[str, int]:
         return self.engine.byzantine_stats()
+
+    def scheduler_stats(self) -> Dict[str, int]:
+        s = self.engine.stats
+        return {"waves": s["waves"], "padded_lanes": s["padded_lanes"],
+                "deferred_groups": s["deferred_groups"]}
 
     def take_new_liars(self) -> set:
         return self.engine.take_new_liars()

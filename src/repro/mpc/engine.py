@@ -15,6 +15,21 @@ the fewest possible compiled-program dispatches:
   amortized across every batch and every future flush.  Batches are padded
   to the next power of two (capped at ``max_batch``) so recompiles are
   O(log max_batch) per plan, not one per batch size.
+* **Wave admission** (DESIGN.md §10) — ``flush`` no longer drains each
+  group in one monolithic pow2 wave.  Groups are served **round-robin**,
+  one wave per turn (FIFO within a group), so a deep queue in one group
+  never head-of-line-blocks another group's first wave.  *Degraded*
+  groups — pool below N or already escalated to a replan — are deferred
+  to a second phase behind every healthy group (``stats
+  ["deferred_groups"]``): escalation work can't delay healthy traffic.
+  Wave width adapts to the plan's per-request scalar cost
+  (``wave_scalars``): dispatch-bound small-m groups take wide vmapped
+  waves, compute-bound large-m groups degrade to width 1 and are served
+  through the plan's *fused* single-request program (vmapping large
+  blocks measures slower than the fused path at every width).  Tail
+  waves split exactly (a 17-request group runs 16+1 lanes, not 32);
+  padding only survives when it costs ≤ wave/4 lanes, and is counted in
+  ``stats["padded_lanes"]``.
 * **Per-request dropout** — each request may carry its own ``survivors``
   mask.  Decode sub-groups requests by their survivor index prefix and runs
   one vmapped ``decode`` per pattern, with rows served from the plan's
@@ -49,7 +64,7 @@ exercised through :meth:`ElasticPool.reconstruction_weights`.
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional
 
 import jax
@@ -97,15 +112,61 @@ def _pad_pow2(n: int, cap: int) -> int:
     return min(out, cap)
 
 
+def _pow2_floor(n: int) -> int:
+    """Largest power of two ≤ n (n ≥ 1)."""
+    out = 1
+    while out * 2 <= n:
+        out *= 2
+    return out
+
+
+def _next_wave(n: int, cap: int) -> int:
+    """How many of ``n`` queued requests the next wave serves (≤ cap).
+
+    Full waves take ``cap`` lanes.  A tail keeps its pow2 pad only when
+    the padding costs ≤ wave/4 lanes; otherwise it splits at the largest
+    power of two so padded lanes never exceed the exact-tail split (a
+    17-request group runs 16+1 lanes, never 32)."""
+    if n >= cap:
+        return cap
+    p = _pad_pow2(n, cap)
+    if (p - n) * 4 <= p:
+        return n
+    return _pow2_floor(n)
+
+
+@dataclasses.dataclass
+class _GroupQueue:
+    """One serving group's FIFO queue during a flush."""
+
+    proto: AGECMPCProtocol     # protocol the group is served under
+    replanned: bool            # serving key differs from submit key
+    queue: "deque[MPCRequest]"
+
+
 class MPCEngine:
     """Batched MPC request engine: queue, group, vmap, decode, escalate."""
 
+    #: default per-wave scalar budget: wide enough that dispatch-bound
+    #: small-m groups keep max_batch-wide vmapped waves, tight enough
+    #: that compute-bound m≳128 groups degrade to the fused width-1 path
+    WAVE_SCALARS = 256_000
+
     def __init__(self, *, spares: int = 2, max_batch: int = 64, cost=None,
-                 injector=None):
+                 injector=None, wave_scalars: Optional[int] = WAVE_SCALARS,
+                 inflight: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if inflight is not None and inflight < 1:
+            raise ValueError(f"inflight must be >= 1, got {inflight}")
         self.spares = spares
         self.max_batch = max_batch
+        # adaptive wave width: each wave's lanes×per-request scalar cost
+        # stays under this budget (None: legacy fixed max_batch waves)
+        self.wave_scalars = wave_scalars
+        # hard per-group in-flight budget (lanes per round-robin turn);
+        # overrides the adaptive width when set
+        self.inflight = inflight
         # CostModel for attrition-time re-tuning (None: default weights);
         # stats["replans"] counts every escalation, stats["retunes"] the
         # subset won by the cost-model search (DESIGN.md §7)
@@ -123,7 +184,8 @@ class MPCEngine:
         self._next_rid = 0
         self.stats = {"batches": 0, "replans": 0, "retunes": 0,
                       "drains": 0, "masks_dropped": 0, "failed": 0,
-                      "corrections": 0, "evicted_devices": 0}
+                      "corrections": 0, "evicted_devices": 0,
+                      "waves": 0, "padded_lanes": 0, "deferred_groups": 0}
         self.failures: Dict[int, str] = {}
         self._new_liars: set = set()
 
@@ -305,10 +367,21 @@ class MPCEngine:
     def flush(self) -> Dict[int, np.ndarray]:
         """Serve every queued request; returns ``{rid: Y}``.
 
-        One vmapped ``front`` dispatch per (plan group, padded batch), one
-        vmapped ``decode`` dispatch per distinct survivor pattern within
-        the batch (padded the same way, so recompiles stay O(log
-        max_batch) per plan).
+        Admission is group-aware (DESIGN.md §10): requests bucket into
+        serving groups by ``group_key``, healthy groups are served before
+        degraded ones (pool below N, or escalated to a replan — counted
+        in ``stats["deferred_groups"]`` when healthy traffic was waiting),
+        and within a phase groups take turns round-robin, one wave per
+        turn, FIFO within each group.  Wave width adapts per group
+        (:meth:`_wave_width`); width-1 non-Byzantine waves short-circuit
+        to the plan's fused single-request program.
+
+        Wide waves keep the compiled-program economics: one vmapped
+        ``front`` dispatch per wave, one vmapped ``decode`` per survivor
+        pattern within it, pow2-padded so recompiles stay O(log
+        max_batch) per plan — but tails now split exactly
+        (:func:`_next_wave`), and surviving pad is ``stats
+        ["padded_lanes"]``.
 
         Failures are isolated, never batch-fatal: a request whose
         effective mask (its own ∩ the pool's) drops below ``t²+z``, or a
@@ -323,6 +396,8 @@ class MPCEngine:
             groups.setdefault(req.proto.group_key, []).append(req)
         results: Dict[int, np.ndarray] = {}
         self.failures = {}
+        healthy: List[_GroupQueue] = []
+        degraded: List[_GroupQueue] = []
         for key, reqs in groups.items():
             try:
                 serving = self._serving_proto(key, reqs[0].proto)
@@ -331,14 +406,83 @@ class MPCEngine:
                     self._fail_request(req, str(e))
                 continue
             replanned = serving.group_key != key
-            for lo in range(0, len(reqs), self.max_batch):
-                self._flush_batch(serving, replanned,
-                                  reqs[lo:lo + self.max_batch], results)
+            pool = self._pools.get(serving.group_key)
+            below = (pool is not None
+                     and int(pool.alive.sum()) < serving.n_workers)
+            entry = _GroupQueue(serving, replanned, deque(reqs))
+            (degraded if (replanned or below) else healthy).append(entry)
+        if healthy and degraded:
+            self.stats["deferred_groups"] += len(degraded)
+        self._serve_phase(healthy, results)
+        self._serve_phase(degraded, results)
         return results
 
-    def _flush_batch(self, proto: AGECMPCProtocol, replanned: bool,
-                     reqs: List[MPCRequest],
+    def _wave_width(self, proto: AGECMPCProtocol) -> int:
+        """Lanes per wave for one group (a power of two ≤ max_batch).
+
+        ``inflight`` (when set) is a hard per-turn budget.  Otherwise the
+        width keeps ``lanes × per-request scalars`` under
+        ``wave_scalars``: small-m groups are dispatch-bound and batch at
+        ``max_batch``, while large-m groups are compute-bound — vmapped
+        waves measure *slower* than the fused per-request program there
+        at every width, so they degrade to width 1 and take the fused
+        path.  ``wave_scalars=None`` restores legacy fixed-width waves.
+        """
+        if self.inflight is not None:
+            w = self.inflight
+        elif self.wave_scalars is None:
+            return self.max_batch
+        else:
+            spec = proto.spec
+            per = (proto.n_workers * (spec.m // spec.t) ** 2
+                   + 2 * spec.m * spec.m)
+            w = max(1, self.wave_scalars // per)
+        return _pow2_floor(min(w, self.max_batch))
+
+    def _serve_phase(self, entries: List[_GroupQueue],
                      results: Dict[int, np.ndarray]) -> None:
+        """Round-robin the phase's groups, one wave per turn (FIFO within
+        a group) — per-group in-flight budgets, no head-of-line blocking."""
+        rr = deque(entries)
+        while rr:
+            g = rr.popleft()
+            width = self._wave_width(g.proto)
+            take = _next_wave(len(g.queue), width)
+            reqs = [g.queue.popleft() for _ in range(take)]
+            self.stats["waves"] += 1
+            if take == 1 and width == 1 and not g.proto.spec.adversaries:
+                self._serve_single(g.proto, g.replanned, reqs[0], results)
+            else:
+                self._flush_wave(g.proto, g.replanned, reqs, results)
+            if g.queue:
+                rr.append(g)
+
+    def _serve_single(self, proto: AGECMPCProtocol, replanned: bool,
+                      req: MPCRequest,
+                      results: Dict[int, np.ndarray]) -> None:
+        """Width-1 fast path: the plan's fused (non-vmapped) program —
+        measured faster than a one-lane vmapped wave for compute-bound
+        groups.  Mask semantics match the wave path exactly."""
+        n = proto.n_workers
+        pool = self._pools.get(proto.group_key)
+        mask = (pool.alive[:n].copy() if pool is not None
+                else np.ones(n, bool))
+        if req.survivors is not None:
+            if replanned:
+                # sized for the pre-replan worker set: no longer valid
+                self.stats["masks_dropped"] += 1
+            else:
+                mask &= req.survivors
+        try:
+            surv = None if mask.all() else mask
+            results[req.rid] = proto.run(req.a, req.b, req.key,
+                                         survivors=surv)
+        except RuntimeError as e:
+            self._fail_request(req, str(e))
+
+    def _flush_wave(self, proto: AGECMPCProtocol, replanned: bool,
+                    reqs: List[MPCRequest],
+                    results: Dict[int, np.ndarray]) -> None:
         plan = proto.plan
         stages = plan.stages()
         n = proto.n_workers
@@ -350,6 +494,7 @@ class MPCEngine:
         # a plan compiles O(log max_batch) batch shapes, not one per size
         width = _pad_pow2(len(reqs), self.max_batch)
         pad = width - len(reqs)
+        self.stats["padded_lanes"] += pad  # the waste _next_wave left
         a = jnp.stack([r.a for r in reqs] + [reqs[-1].a] * pad)
         b = jnp.stack([r.b for r in reqs] + [reqs[-1].b] * pad)
         keys = jnp.stack([jnp.asarray(r.key) for r in reqs]

@@ -1,7 +1,15 @@
-"""Minimal batched serving engine: prefill → greedy decode loop.
+"""Batched serving engine over the continuous-batching scheduler.
 
-Production notes: static-shape caches (pad prefill cache to
-prompt+max_new), batched requests, jit-compiled prefill and decode steps.
+``Engine.generate`` keeps the seed contract — ``[B, T] → [B, max_new]``
+greedy continuation — but routes transformer-family models through the
+paged :class:`~repro.serve.scheduler.ServeScheduler` (one lane per row,
+pool sized to the call).  Families without a paged decode path (rwkv,
+jamba, whisper) keep the seed one-shot loop.  Outputs are bit-identical
+either way (pinned by ``tests/test_serving.py``).
+
+Long-lived serving should use :meth:`Engine.make_scheduler` directly:
+submit requests as they arrive, call ``step``/``run``, and let paging +
+admission do their thing across requests of different lengths.
 """
 from __future__ import annotations
 
@@ -15,6 +23,7 @@ import jax.numpy as jnp
 from ..models.api import get_model
 from ..models.config import ModelConfig
 from ..models.layers import KVCache
+from .scheduler import ServeScheduler
 
 
 def _pad_cache(cache, extra: int):
@@ -39,17 +48,51 @@ def _pad_cache(cache, extra: int):
 class Engine:
     cfg: ModelConfig
     params: dict
+    block_size: int = 16
 
     def __post_init__(self):
         self.model = get_model(self.cfg)
         self._prefill = jax.jit(partial(self.model.prefill, self.cfg))
         self._decode = jax.jit(partial(self.model.decode_step, self.cfg))
+        self._paged = hasattr(self.model, "decode_step_paged")
+        # cache the jitted paged step on the engine so every scheduler this
+        # engine spawns shares one compile per (lanes, pool) geometry; the
+        # pool buffer is donated — each step updates it in place instead of
+        # copying the whole block pool
+        self._paged_step = (jax.jit(partial(self.model.decode_step_paged,
+                                            self.cfg), donate_argnums=(1,))
+                            if self._paged else None)
+
+    def make_scheduler(self, *, lanes: int = 4,
+                       n_blocks: Optional[int] = None,
+                       max_len: int = 512) -> ServeScheduler:
+        """A continuous-batching scheduler sharing this engine's compiles."""
+        return ServeScheduler(self.cfg, self.params, lanes=lanes,
+                              block_size=self.block_size, n_blocks=n_blocks,
+                              max_len=max_len, prefill_fn=self._prefill,
+                              step_fn=self._paged_step)
 
     def generate(self, prompt: jax.Array, max_new: int,
                  embeds: Optional[jax.Array] = None) -> jax.Array:
         """prompt: [B, T] int32 → [B, max_new] greedy continuation."""
         if max_new < 1:  # honor the [B, max_new] contract without a prefill
             return jnp.zeros((prompt.shape[0], 0), jnp.int32)
+        if not self._paged:
+            return self._generate_legacy(prompt, max_new, embeds)
+        b = prompt.shape[0]
+        need = prompt.shape[1] + (
+            embeds.shape[1] if embeds is not None else 0) + max_new - 1
+        sched = self.make_scheduler(lanes=b, max_len=need)
+        rids = [sched.submit(prompt[i:i + 1], max_new,
+                             embeds=None if embeds is None
+                             else embeds[i:i + 1])
+                for i in range(b)]
+        done = sched.run()
+        return jnp.stack([jnp.asarray(done[r]) for r in rids])
+
+    def _generate_legacy(self, prompt: jax.Array, max_new: int,
+                         embeds: Optional[jax.Array] = None) -> jax.Array:
+        """Seed one-shot loop: static KV slab, lock-step decode."""
         logits, cache = self._prefill(self.params, prompt, embeds=embeds)
         # the prefill cache already holds the prompt (+ embeds) positions
         # and the first token comes straight from the prefill logits, so

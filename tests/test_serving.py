@@ -60,6 +60,45 @@ def test_kv_cache_allocation_exact_with_embeds():
         np.asarray(engine.generate(prompt, max_new, embeds=embeds)))
 
 
+def test_generate_wrapper_token_identical_to_seed_loop():
+    """``Engine.generate`` is now a thin wrapper over the paged
+    continuous-batching scheduler; its tokens must be bit-identical to the
+    seed one-shot greedy loop — including the ``embeds`` prefix and the
+    ``max_new ∈ {0, 1}`` edges."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params)
+    prompt = jax.random.randint(jax.random.PRNGKey(8), (3, 7), 0, cfg.vocab)
+    embeds = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(9), (3, 2, cfg.d_model))
+    for max_new in (0, 1, 5):
+        for emb in (None, embeds):
+            got = engine.generate(prompt, max_new, embeds=emb)
+            want = engine._generate_legacy(prompt, max_new, embeds=emb) \
+                if max_new >= 1 else jnp.zeros((3, 0), jnp.int32)
+            assert got.shape == (3, max_new)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want),
+                err_msg=f"max_new={max_new} embeds={emb is not None}")
+
+
+def test_non_transformer_families_keep_legacy_loop():
+    """Families without a paged decode path still serve through the seed
+    loop — same contract, no scheduler involvement."""
+    cfg = reduced(get_config("rwkv6-1.6b"))
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params)
+    assert not engine._paged
+    prompt = jax.random.randint(jax.random.PRNGKey(10), (2, 6), 0, cfg.vocab)
+    out = engine.generate(prompt, 4)
+    assert out.shape == (2, 4)
+    assert int(out.max()) < cfg.vocab
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(engine.generate(prompt, 4)))
+
+
 def test_generate_matches_teacher_forcing():
     """Greedy engine output == argmax of a full forward over the same
     prefix, step by step."""

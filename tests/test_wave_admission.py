@@ -1,0 +1,191 @@
+"""Group-aware wave admission in ``MPCEngine.flush`` (DESIGN.md §10):
+exact-tail splits, adaptive wave width, the width-1 fused fast path,
+round-robin fairness with degraded-group deferral, and the session-level
+scheduler-stats mirror."""
+import jax
+import numpy as np
+
+from repro.mpc import AGECMPCProtocol, MPCSpec, connect
+from repro.mpc.engine import MPCEngine, _next_wave
+
+
+def exact_ref(a, b, p):
+    return np.array((a.astype(object).T @ b.astype(object)) % p,
+                    dtype=np.int64)
+
+
+def _submit_n(eng, n, *, prm, rng, key0=0):
+    proto = AGECMPCProtocol(**prm)
+    p, m = proto.field.p, prm["m"]
+    want = {}
+    for i in range(n):
+        a = rng.integers(0, p, (m, m))
+        b = rng.integers(0, p, (m, m))
+        rid = eng.submit(a, b, key=jax.random.PRNGKey(key0 + i), **prm)
+        want[rid] = exact_ref(a, b, p)
+    return want
+
+
+def _check(results, want):
+    assert set(results) == set(want)
+    for rid, y in want.items():
+        np.testing.assert_array_equal(np.asarray(results[rid]), y,
+                                      err_msg=f"request {rid}")
+
+
+# ------------------------------------------------------- exact-tail split
+def test_next_wave_exact_tail_split():
+    # 17 requests split 16+1 (0 pad), never one 32-lane wave (15 pad)
+    assert _next_wave(17, 64) == 16
+    assert _next_wave(1, 64) == 1
+    # a 15-request tail keeps its pow2 pad (1 lane ≤ 16/4)
+    assert _next_wave(15, 64) == 15
+    # 23 → 16, then 7 stays one wave padded to 8 (1 lane ≤ 8/4)
+    assert _next_wave(23, 16) == 16
+    assert _next_wave(7, 16) == 7
+    # 9 → split at 8 (padding 7 of 16 would blow the waste cap)
+    assert _next_wave(9, 16) == 8
+    assert _next_wave(5, 64) == 4  # pad 3 of 8 > 8/4: split
+
+
+def test_17_requests_zero_padded_lanes():
+    """The ISSUE's waste case: a 17-request group used to run 32 lanes."""
+    eng = MPCEngine(max_batch=64)
+    rng = np.random.default_rng(0)
+    prm = dict(s=2, t=2, z=2, m=8)
+    want = _submit_n(eng, 17, prm=prm, rng=rng)
+    _check(eng.flush(), want)
+    assert eng.stats["padded_lanes"] == 0        # 16 + 1, no padding
+    assert eng.stats["waves"] == 2
+    # padded lanes never exceed the smallest pow2 cover minus one — and
+    # stay under wave/4: 15 requests pad one lane, observable in stats
+    want = _submit_n(eng, 15, prm=prm, rng=rng, key0=100)
+    _check(eng.flush(), want)
+    assert eng.stats["padded_lanes"] == 1        # one 16-lane wave
+
+
+# ---------------------------------------------------- adaptive wave width
+def test_wave_width_adapts_to_scalar_cost():
+    eng = MPCEngine(max_batch=16)
+    small = AGECMPCProtocol(s=2, t=2, z=2, m=8)
+    big = AGECMPCProtocol(s=2, t=2, z=2, m=144)
+    assert eng._wave_width(small) == 16   # dispatch-bound: full batch
+    assert eng._wave_width(big) == 1      # compute-bound: fused path
+    legacy = MPCEngine(max_batch=16, wave_scalars=None)
+    assert legacy._wave_width(big) == 16  # legacy fixed-width waves
+    capped = MPCEngine(max_batch=16, inflight=2)
+    assert capped._wave_width(small) == 2  # hard per-turn budget wins
+
+
+def test_width1_fused_path_serves_exactly():
+    """inflight=1 forces the width-1 short circuit (the same path
+    compute-bound groups take): no vmapped dispatches, same results,
+    mask semantics and failure isolation intact."""
+    eng = MPCEngine(spares=2, max_batch=8, inflight=1)
+    rng = np.random.default_rng(1)
+    prm = dict(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol(**prm)
+    t2z = proto.recovery_threshold
+    want = _submit_n(eng, 3, prm=prm, rng=rng)
+    # a per-request dropout mask rides along on the fused path
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+    mask = np.ones(proto.n_workers, bool)
+    mask[:3] = False
+    rid_m = eng.submit(a, b, key=jax.random.PRNGKey(50), survivors=mask,
+                       **prm)
+    want[rid_m] = exact_ref(a, b, proto.field.p)
+    results = eng.flush()
+    _check(results, want)
+    assert eng.stats["batches"] == 0      # never vmapped
+    assert eng.stats["waves"] == 4
+    # pool attrition folds into the fused path's mask like the wave path
+    eng.fail([0], **prm)
+    doomed = np.zeros(proto.n_workers, bool)
+    doomed[:t2z] = True                   # t²+z alive incl. dead worker 0
+    rid_bad = eng.submit(a, b, key=jax.random.PRNGKey(51),
+                         survivors=doomed, **prm)
+    rid_ok = eng.submit(a, b, key=jax.random.PRNGKey(52), **prm)
+    results = eng.flush()
+    assert rid_bad not in results
+    assert rid_bad in eng.failures
+    np.testing.assert_array_equal(np.asarray(results[rid_ok]),
+                                  exact_ref(a, b, proto.field.p))
+
+
+def test_byzantine_group_keeps_vmapped_path_at_width1():
+    """An adversary budget makes MAC verification non-optional: even a
+    width-1 wave runs the tagged vmapped pipeline, not the plain fused
+    program."""
+    eng = MPCEngine(max_batch=8, inflight=1)
+    rng = np.random.default_rng(2)
+    spec = MPCSpec(s=2, t=2, z=2, m=8, adversaries=1)
+    proto = AGECMPCProtocol.from_spec(spec)
+    a = rng.integers(0, proto.field.p, (8, 8))
+    b = rng.integers(0, proto.field.p, (8, 8))
+    rid = eng.submit(a, b, key=jax.random.PRNGKey(0), spec=spec)
+    results = eng.flush()
+    np.testing.assert_array_equal(np.asarray(results[rid]),
+                                  exact_ref(a, b, proto.field.p))
+    assert eng.stats["batches"] == 1      # verified wave, vmapped
+
+
+# --------------------------------------------- fairness / group deferral
+def test_round_robin_interleaves_groups():
+    """With a per-turn budget, a deep queue in one group cannot serve all
+    its waves before another group's first wave."""
+    eng = MPCEngine(max_batch=8, inflight=1)
+    rng = np.random.default_rng(3)
+    want = _submit_n(eng, 6, prm=dict(s=2, t=2, z=2, m=8), rng=rng)
+    want.update(_submit_n(eng, 2, prm=dict(s=3, t=2, z=2, m=12), rng=rng,
+                          key0=200))
+    order = []
+    orig = MPCEngine._serve_single
+
+    def spy(self, proto, replanned, req, results):
+        order.append((proto.spec.m, req.rid))
+        return orig(self, proto, replanned, req, results)
+
+    MPCEngine._serve_single = spy
+    try:
+        _check(eng.flush(), want)
+    finally:
+        MPCEngine._serve_single = orig
+    # both m=12 turns land before the m=8 queue drains (round-robin)
+    assert [m for m, _ in order[:4]] == [8, 12, 8, 12]
+    # FIFO within each group: rids served in submit order
+    for m in (8, 12):
+        rids = [r for gm, r in order if gm == m]
+        assert rids == sorted(rids)
+
+
+def test_degraded_group_deferred_behind_healthy():
+    """A group escalated to a replan is served AFTER healthy groups and
+    counted in stats["deferred_groups"] — no head-of-line blocking."""
+    eng = MPCEngine(spares=1, max_batch=8)
+    rng = np.random.default_rng(4)
+    prm_bad = dict(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol(**prm_bad)
+    eng.fail(list(range(proto.n_workers - 7)), **prm_bad)  # force replan
+    want = _submit_n(eng, 2, prm=prm_bad, rng=rng)
+    want.update(_submit_n(eng, 2, prm=dict(s=3, t=2, z=2, m=12), rng=rng,
+                          key0=300))
+    _check(eng.flush(), want)
+    assert eng.stats["replans"] == 1
+    assert eng.stats["deferred_groups"] == 1
+    # a later flush with ONLY the degraded group defers nothing
+    want = _submit_n(eng, 1, prm=prm_bad, rng=rng, key0=400)
+    _check(eng.flush(), want)
+    assert eng.stats["deferred_groups"] == 1
+
+
+# ------------------------------------------------------- session mirror
+def test_session_mirrors_scheduler_stats():
+    sess = connect(MPCSpec(s=2, t=2, z=2), backend="batched", max_batch=8)
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((12, 12))
+    b = rng.standard_normal((12, 12))
+    sess.matmul(a, b)
+    assert sess.stats["waves"] >= 1
+    assert sess.stats["padded_lanes"] >= 0
+    assert sess.stats["deferred_groups"] == 0
