@@ -26,7 +26,32 @@ def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
                         help="fast protocol sanity leg only (CI)")
+    parser.add_argument("--seed", type=int, default=0,
+                        help="rng seed threaded through the smoke leg and "
+                             "fleet replays, so recorded numbers are "
+                             "reproducible run to run")
+    parser.add_argument("--sim-divergence", action="store_true",
+                        help="predicted-vs-replayed divergence gate "
+                             "(DESIGN.md §11): tune + replay two specs on "
+                             "a 1000-device simulated fleet; non-zero exit "
+                             "when the makespan ratio drifts past "
+                             "tolerance or the placement ranking flips")
     args = parser.parse_args(argv)
+
+    if args.sim_divergence:
+        import json
+
+        from repro.sim import gate
+
+        print("== sim divergence gate (predicted vs replayed) ==")
+        report = gate(seed=args.seed)
+        print(json.dumps(report.describe(), indent=1))
+        if not report.ok:
+            sys.exit("sim divergence gate FAILED: cost-model predictions "
+                     "drifted past tolerance or the tuned-vs-oblivious "
+                     "ranking flipped")
+        print("sim divergence gate OK")
+        return
 
     from benchmarks import (  # noqa: WPS433
         fig2_workers,
@@ -38,7 +63,7 @@ def main(argv=None) -> None:
 
     if args.smoke:
         print("== protocol smoke (fused / survivor / engine) ==")
-        protocol_bench.smoke()
+        protocol_bench.smoke(seed=args.seed)
         return
 
     print("== fig2: required workers (paper Fig. 2) ==")

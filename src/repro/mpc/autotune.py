@@ -55,7 +55,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Mapping, Optional, Sequence, Tuple
 
 from ..core.overheads import Overheads, overheads
 from .field import DEFAULT_FIELD, Field
@@ -68,6 +69,20 @@ from .workers import WorkerPool
 MAX_PARTITION = 8
 
 _SCHEME_RANK = {"age": 0, "entangled": 1, "polydot": 2}
+
+
+class CalibrationWarning(RuntimeWarning):
+    """A cost-model calibration fell back to the paper's equal weights.
+
+    Emitted by :meth:`CostModel.from_bench` when the bench trajectory is
+    missing/unreadable, has too few usable samples, or fits degenerate
+    weights — the returned model is still valid (pure Fig. 3 objective),
+    but its ranking is *unmeasured* for the current backend, which is
+    exactly the regression the fleet simulator's divergence gate exists
+    to catch (DESIGN.md §11).  Filter with ``warnings.simplefilter`` in
+    contexts where the fallback is expected (fresh checkouts, unit
+    tests).
+    """
 
 
 # ============================================================== cost model
@@ -95,12 +110,22 @@ class CostModel:
     storage: float = 1.0
     communication: float = 1.0
     dispatch: float = 0.0
+    #: measured per-`WorkerClass` (ξ, σ, ζ) rate multipliers, as a sorted
+    #: ``((name, (mc, ms, ml)), …)`` tuple so the model stays hashable;
+    #: empty ⇒ hand-set pool rates are trusted as-is (DESIGN.md §11)
+    class_multipliers: Tuple[Tuple[str, Tuple[float, float, float]], ...] = ()
 
     def __post_init__(self):
         for name in ("computation", "storage", "communication", "dispatch"):
             v = getattr(self, name)
             if not (isinstance(v, (int, float)) and v >= 0):
                 raise ValueError(f"{name} weight must be >= 0, got {v!r}")
+        for cls_name, mult in self.class_multipliers:
+            if len(mult) != 3 or any(not (isinstance(f, (int, float))
+                                          and f > 0) for f in mult):
+                raise ValueError(
+                    f"class multiplier for {cls_name!r} must be three "
+                    f"positive factors, got {mult!r}")
 
     def block(self, m: int, s: int, t: int, z: int, n: int, *,
               pool: Optional[WorkerPool] = None,
@@ -119,6 +144,7 @@ class CostModel:
         ov = overheads(m, s, t, z, n)
         cmax = smax = lmax = 1.0
         if pool is not None:
+            pool = self.recalibrated_pool(pool)
             if placement is None:
                 placement = pool.place(n, self)
             cmax, smax, lmax = pool.bottleneck(placement)
@@ -146,6 +172,39 @@ class CostModel:
             return self
         return dataclasses.replace(self, dispatch=self.dispatch * scale)
 
+    def with_class_multipliers(
+            self, multipliers: Mapping[str, Sequence[float]]) -> "CostModel":
+        """These weights carrying measured per-class (ξ, σ, ζ) rate
+        multipliers (DESIGN.md §11).
+
+        ``multipliers`` maps a :class:`~repro.mpc.workers.WorkerClass`
+        name to the three per-resource factors a calibration fit
+        recovered (:func:`repro.sim.calibrate.fit_class_multipliers`).
+        They are stored sorted-by-name so equal calibrations hash and
+        compare equal, and applied wherever the model touches a pool —
+        :meth:`block` scoring, :func:`search`/:func:`retune_spec`
+        placement, :func:`predicted_makespan` — via
+        :meth:`recalibrated_pool`.
+        """
+        packed = []
+        for name, f in multipliers.items():
+            factors = tuple(float(x) for x in f)
+            if len(factors) != 3:
+                raise ValueError(
+                    f"class {name!r} needs exactly 3 (xi, sigma, zeta) "
+                    f"factors, got {len(factors)}")
+            packed.append((str(name), factors))
+        return dataclasses.replace(self,
+                                   class_multipliers=tuple(sorted(packed)))
+
+    def recalibrated_pool(self, pool):
+        """``pool`` with this model's class multipliers applied — the
+        unchanged pool when none are set (the hand-set-rates path stays
+        bit-identical)."""
+        if pool is None or not self.class_multipliers:
+            return pool
+        return pool.recalibrated(dict(self.class_multipliers))
+
     # ------------------------------------------------------------ calibration
     @classmethod
     def from_bench(cls, path: str = "BENCH_PROTOCOL.json", *,
@@ -167,18 +226,31 @@ class CostModel:
 
         Falls back to the paper's equal weights when the file is absent,
         malformed, has fewer than 3 usable samples, or fits degenerate
-        (all-zero) weights.
+        (all-zero) weights — each fallback emits a
+        :class:`CalibrationWarning` naming the path taken, so a serving
+        stack silently running on unmeasured weights is visible in logs
+        and CI rather than only in a mis-ranked tune.
         """
         import numpy as np
 
-        fb = cls(dispatch=dispatch) if fallback is None else fallback
+        def _fall_back(reason: str) -> "CostModel":
+            warnings.warn(
+                f"CostModel.from_bench({path!r}): {reason}; falling back "
+                f"to unmeasured paper weights (equal per-scalar costs)",
+                CalibrationWarning, stacklevel=3)
+            return cls(dispatch=dispatch) if fallback is None else fallback
+
         try:
             with open(path) as f:
                 runs = json.load(f)
-        except (OSError, ValueError):
-            return fb
+        except OSError as e:
+            return _fall_back(f"bench trajectory unreadable ({e})")
+        except ValueError as e:
+            return _fall_back(f"bench trajectory is not valid JSON ({e})")
         if not isinstance(runs, list):
-            return fb
+            return _fall_back(
+                f"bench trajectory root must be a list of runs, got "
+                f"{type(runs).__name__}")
         pat = re.compile(r"xi=([0-9.eE+-]+);sigma=([0-9.eE+-]+);"
                          r"zeta=([0-9.eE+-]+)")
         rows, ys = [], []
@@ -194,7 +266,9 @@ class CostModel:
                     except ValueError:
                         continue
         if len(rows) < 3:
-            return fb
+            return _fall_back(
+                f"only {len(rows)} usable xi/sigma/zeta samples (need >= 3 "
+                f"for the 3-weight fit)")
         x = np.asarray(rows, float)
         y = np.asarray(ys, float)
         scale = x.max(axis=0)
@@ -214,7 +288,9 @@ class CostModel:
             active = [i for i in active if i not in neg]
         w = w / scale
         if not (np.all(np.isfinite(w)) and np.any(w > 0)):
-            return fb
+            return _fall_back(
+                f"fit degenerate over {len(rows)} samples (weights "
+                f"{w.tolist()}): trajectory is collinear or zero-signal")
         return cls(computation=float(w[0]), storage=float(w[1]),
                    communication=float(w[2]), dispatch=dispatch)
 
@@ -379,11 +455,12 @@ def search(n_workers: Optional[int] = None, z: int = None, shape=None, *,
     cm = DEFAULT_COST if cost is None else cost
     r, k, c = _shape3(shape)
     out = []
+    placing = cm.recalibrated_pool(pool)   # measured rates steer placement
     for scheme, ss, tt, lm, n in _feasible(
             budget, z, schemes, _axis_range(t, max_partition),
             _axis_range(s, max_partition), lam, adversaries):
-        placement = None if pool is None else pool.place(n, cm,
-                                                         within=within)
+        placement = None if pool is None else placing.place(n, cm,
+                                                            within=within)
         m, blocks, over, sc = best_block(
             ss, tt, z, n, r, k, c, cost=cm, batch=batch,
             budget=tile_budget, pool=pool, placement=placement)
@@ -425,6 +502,41 @@ class TuneResult:
         opts.setdefault("tile_budget", self.tile_budget)
         opts.setdefault("cost", self.cost)
         return connect(self.spec, backend, **opts)
+
+    def predicted_makespan(self, *, waves: float = 1.0) -> float:
+        """Per-block µs makespan the tuned spec is predicted to achieve —
+        :func:`predicted_makespan` under this result's cost model."""
+        return predicted_makespan(self.spec, cost=self.cost, waves=waves)
+
+
+def predicted_makespan(spec, *, cost: Optional[CostModel] = None,
+                       waves: float = 1.0) -> float:
+    """Model-predicted per-block µs makespan of a tuned spec — THE number
+    the fleet simulator's divergence gate compares against a replay
+    (DESIGN.md §11).
+
+    Evaluates :func:`repro.mpc.workers.modeled_makespan` on the spec's
+    pool (recalibrated by the cost model's class multipliers, when set)
+    at the spec's effective placement, adversary budget and the given
+    backend wave count (:func:`repro.mpc.workers.dispatch_waves`).
+    Requires a pool-carrying spec — there is no per-slot makespan to
+    predict for the abstract ``int N`` budget.
+    """
+    from .workers import modeled_makespan
+
+    if spec.pool is None:
+        raise ValueError(
+            "predicted_makespan requires a spec carrying a WorkerPool "
+            "(tune(pool=...)); an int worker budget has no device rates "
+            "to predict with")
+    cm = DEFAULT_COST if cost is None else cost
+    pool = cm.recalibrated_pool(spec.pool)
+    placement = spec.effective_placement
+    if placement is None:
+        placement = pool.place(spec.n_workers, cm)
+    return modeled_makespan(
+        spec.m, spec.s, spec.t, spec.z, spec.n_workers, cm, pool,
+        placement, adversaries=spec.adversaries, waves=waves)
 
 
 def tune(n_workers: Optional[int] = None, z: int = None, shape=None, *,
@@ -541,11 +653,12 @@ def retune_spec(n_workers: Optional[int] = None, z: int = None, *, m: int,
     limit = min(m, MAX_PARTITION if max_partition is None else max_partition)
     divisors = [d for d in range(1, limit + 1) if m % d == 0]
     best: Optional[Tuple[Tuple, Candidate]] = None
+    placing = cm.recalibrated_pool(pool)
     for scheme, ss, tt, lm, n in _feasible(budget, z, schemes,
                                            divisors, divisors, None,
                                            adversaries):
-        placement = None if pool is None else pool.place(n, cm,
-                                                         within=within)
+        placement = None if pool is None else placing.place(n, cm,
+                                                            within=within)
         cand = Candidate(
             scheme=scheme, s=ss, t=tt, lam=lm, n_workers=n,
             m=m, n_blocks=1, over_budget=False,

@@ -166,8 +166,10 @@ class ShardedBackend(MPCBackend):
         another full launch's worth of host+device dispatch.  The block
         search therefore coarsens sooner here than on the local backend
         (axis size vs N)."""
-        d = int(self.mesh.shape[self.axis])
-        return float(-(-spec.n_workers // d))
+        from .workers import dispatch_waves
+
+        return float(dispatch_waves(spec.n_workers,
+                                    self.mesh.shape[self.axis]))
 
     def _runner(self, proto):
         from .secure_matmul import ShardedCMPC
@@ -199,7 +201,7 @@ class BatchedBackend(MPCBackend):
 
     def __init__(self, *, spares: int = 2, max_batch: int = 64, engine=None,
                  cost=None, injector=None, wave_scalars=_UNSET,
-                 inflight=None):
+                 inflight=None, recorder=None):
         from .engine import MPCEngine
 
         if engine is None:
@@ -207,7 +209,7 @@ class BatchedBackend(MPCBackend):
                 wave_scalars=wave_scalars)
             engine = MPCEngine(spares=spares, max_batch=max_batch,
                                cost=cost, injector=injector,
-                               inflight=inflight, **kw)
+                               inflight=inflight, recorder=recorder, **kw)
         else:
             if injector is not None:
                 engine.injector = injector
@@ -215,6 +217,8 @@ class BatchedBackend(MPCBackend):
                 engine.wave_scalars = wave_scalars
             if inflight is not None:
                 engine.inflight = inflight
+            if recorder is not None:
+                engine.recorder = recorder
         self.engine = engine
         self._dead: frozenset = frozenset()
 

@@ -64,6 +64,7 @@ exercised through :meth:`ElasticPool.reconstruction_weights`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict, deque
 from typing import Dict, List, Optional
 
@@ -135,6 +136,45 @@ def _next_wave(n: int, cap: int) -> int:
     return _pow2_floor(n)
 
 
+#: default per-wave scalar budget (also the class attribute
+#: ``MPCEngine.WAVE_SCALARS``): wide enough that dispatch-bound small-m
+#: groups keep max_batch-wide vmapped waves, tight enough that
+#: compute-bound m≳128 groups degrade to the fused width-1 path
+WAVE_SCALARS = 256_000
+
+
+def request_scalars(spec) -> int:
+    """Per-request scalar cost one wave lane pays under this spec: the
+    N interpolation points (``(m/t)²`` each) plus the two ``m×m``
+    operands.  The admission unit of the adaptive wave width — and the
+    per-lane work unit the fleet simulator replays (DESIGN.md §10/§11)."""
+    return (spec.n_workers * (spec.m // spec.t) ** 2
+            + 2 * spec.m * spec.m)
+
+
+def wave_width(spec, *, max_batch: int,
+               wave_scalars: Optional[int] = None,
+               inflight: Optional[int] = None) -> int:
+    """Lanes per wave for one serving group (a power of two ≤ max_batch).
+
+    THE wave-admission width formula, shared by :meth:`MPCEngine
+    ._wave_width` and the fleet simulator's replay of it
+    (:mod:`repro.sim.replay`): ``inflight`` (when set) is a hard
+    per-turn budget; otherwise the width keeps ``lanes ×``
+    :func:`request_scalars` under ``wave_scalars`` (small-m groups are
+    dispatch-bound and batch wide, compute-bound large-m groups degrade
+    to width 1 and take the fused path); ``wave_scalars=None`` restores
+    legacy fixed-width waves.
+    """
+    if inflight is not None:
+        w = inflight
+    elif wave_scalars is None:
+        return max_batch
+    else:
+        w = max(1, wave_scalars // request_scalars(spec))
+    return _pow2_floor(min(w, max_batch))
+
+
 @dataclasses.dataclass
 class _GroupQueue:
     """One serving group's FIFO queue during a flush."""
@@ -147,14 +187,12 @@ class _GroupQueue:
 class MPCEngine:
     """Batched MPC request engine: queue, group, vmap, decode, escalate."""
 
-    #: default per-wave scalar budget: wide enough that dispatch-bound
-    #: small-m groups keep max_batch-wide vmapped waves, tight enough
-    #: that compute-bound m≳128 groups degrade to the fused width-1 path
-    WAVE_SCALARS = 256_000
+    #: default per-wave scalar budget (module-level :data:`WAVE_SCALARS`)
+    WAVE_SCALARS = WAVE_SCALARS
 
     def __init__(self, *, spares: int = 2, max_batch: int = 64, cost=None,
                  injector=None, wave_scalars: Optional[int] = WAVE_SCALARS,
-                 inflight: Optional[int] = None):
+                 inflight: Optional[int] = None, recorder=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if inflight is not None and inflight < 1:
@@ -175,6 +213,12 @@ class MPCEngine:
         # groups (spec.adversaries > 0) before the MAC check, keyed by
         # request id as the round counter (DESIGN.md §9)
         self.injector = injector
+        # optional phase-timing sink (duck-typed ``record(**kw)``, e.g.
+        # repro.sim.trace.PhaseRecorder): each wave's front/decode/fused
+        # dispatch is block_until_ready-timed and recorded with its scalar
+        # count, feeding the calibration loop (DESIGN.md §11).  None (the
+        # default) keeps the serving path free of timing barriers.
+        self.recorder = recorder
         self._queue: List[MPCRequest] = []
         # keyed by the serving-group identity (``proto.group_key`` — the
         # plan key extended with placement + pool signature for
@@ -418,26 +462,22 @@ class MPCEngine:
         return results
 
     def _wave_width(self, proto: AGECMPCProtocol) -> int:
-        """Lanes per wave for one group (a power of two ≤ max_batch).
+        """Lanes per wave for one group — the engine's knobs applied to
+        the shared :func:`wave_width` formula (which the fleet simulator
+        replays verbatim, DESIGN.md §11)."""
+        return wave_width(proto.spec, max_batch=self.max_batch,
+                          wave_scalars=self.wave_scalars,
+                          inflight=self.inflight)
 
-        ``inflight`` (when set) is a hard per-turn budget.  Otherwise the
-        width keeps ``lanes × per-request scalars`` under
-        ``wave_scalars``: small-m groups are dispatch-bound and batch at
-        ``max_batch``, while large-m groups are compute-bound — vmapped
-        waves measure *slower* than the fused per-request program there
-        at every width, so they degrade to width 1 and take the fused
-        path.  ``wave_scalars=None`` restores legacy fixed-width waves.
-        """
-        if self.inflight is not None:
-            w = self.inflight
-        elif self.wave_scalars is None:
-            return self.max_batch
-        else:
-            spec = proto.spec
-            per = (proto.n_workers * (spec.m // spec.t) ** 2
-                   + 2 * spec.m * spec.m)
-            w = max(1, self.wave_scalars // per)
-        return _pow2_floor(min(w, self.max_batch))
+    def _record(self, proto: AGECMPCProtocol, phase: str, scalars: int,
+                us: float, lanes: int) -> None:
+        """Feed one timed dispatch to the recorder (device −1: a wave is
+        one jit program over all N logical workers, so the sample is
+        fleet-aggregate; per-device attribution needs the simulator or a
+        real transport)."""
+        self.recorder.record(device=-1, klass=proto.spec.scheme,
+                             phase=phase, scalars=scalars, us=us,
+                             lanes=lanes)
 
     def _serve_phase(self, entries: List[_GroupQueue],
                      results: Dict[int, np.ndarray]) -> None:
@@ -475,8 +515,16 @@ class MPCEngine:
                 mask &= req.survivors
         try:
             surv = None if mask.all() else mask
-            results[req.rid] = proto.run(req.a, req.b, req.key,
-                                         survivors=surv)
+            if self.recorder is None:
+                results[req.rid] = proto.run(req.a, req.b, req.key,
+                                             survivors=surv)
+            else:
+                t0 = time.perf_counter()
+                y = jax.block_until_ready(proto.run(
+                    req.a, req.b, req.key, survivors=surv))
+                self._record(proto, "fused", request_scalars(proto.spec),
+                             (time.perf_counter() - t0) * 1e6, 1)
+                results[req.rid] = y
         except RuntimeError as e:
             self._fail_request(req, str(e))
 
@@ -501,7 +549,14 @@ class MPCEngine:
                          + [jnp.asarray(reqs[-1].key)] * pad)
         vfront = plan.runner(
             "vfront", lambda: jax.jit(jax.vmap(stages.front)))
-        i_pts = vfront(a, b, keys)                     # [B, N, m/t, m/t]
+        if self.recorder is None:
+            i_pts = vfront(a, b, keys)                 # [B, N, m/t, m/t]
+        else:
+            t0 = time.perf_counter()
+            i_pts = jax.block_until_ready(vfront(a, b, keys))
+            self._record(proto, "front",
+                         width * request_scalars(proto.spec),
+                         (time.perf_counter() - t0) * 1e6, width)
         self.stats["batches"] += 1
 
         # verified groups (spec.adversaries > 0): MAC-tag every share with
@@ -572,12 +627,22 @@ class MPCEngine:
         vdecode = plan.runner(
             "vdecode",
             lambda: jax.jit(jax.vmap(stages.decode, in_axes=(0, None, None))))
+        spec = proto.spec
         for idx, positions in patterns.items():
             idx_j, rows_j = plan.survivor_tables(idx)
             # pad like the front batch: subgroup sizes also only compile
             # power-of-two shapes (padded outputs are discarded)
             dw = _pad_pow2(len(positions), width)
             pos_pad = positions + [positions[-1]] * (dw - len(positions))
-            ys = vdecode(i_pts[jnp.asarray(pos_pad)], idx_j, rows_j)
+            if self.recorder is None:
+                ys = vdecode(i_pts[jnp.asarray(pos_pad)], idx_j, rows_j)
+            else:
+                t0 = time.perf_counter()
+                ys = jax.block_until_ready(
+                    vdecode(i_pts[jnp.asarray(pos_pad)], idx_j, rows_j))
+                self._record(
+                    proto, "decode",
+                    dw * len(idx) * (spec.m // spec.t) ** 2,
+                    (time.perf_counter() - t0) * 1e6, dw)
             for k, pos in enumerate(positions):
                 results[reqs[pos].rid] = ys[k]

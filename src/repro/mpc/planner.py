@@ -134,6 +134,63 @@ class ProtocolStages:
     fused: Callable
     tags: Callable
 
+    def timed(self, recorder, *, plan: "ProtocolPlan" = None
+              ) -> "ProtocolStages":
+        """A copy whose stages time each *eager* call and feed the sink.
+
+        ``recorder`` is duck-typed ``record(**kw)`` (e.g. :class:`repro
+        .sim.trace.PhaseRecorder`); each call gets ``phase`` (the stage
+        name), wall ``us`` (``block_until_ready``-fenced), ``scalars``
+        (the stage's Cor. 8–10 work unit when ``plan`` is given, 0
+        otherwise), ``device=-1`` and ``klass=<scheme>`` — a staged jit
+        program runs all N logical workers at once, so samples are
+        fleet-aggregate; per-device attribution comes from the simulator
+        (DESIGN.md §11).
+
+        The wrappers carry host-side timing fences: call them eagerly
+        only.  Re-jitting or vmapping a timed stage would trace the
+        fence into the program — keep handing the *raw* stages to
+        ``plan.runner`` builders.
+        """
+        import time as _time
+
+        counts = _stage_scalars(plan)
+        klass = "stage" if plan is None else plan.scheme
+
+        def wrap(name: str, fn: Callable) -> Callable:
+            def timed_fn(*args, **kw):
+                t0 = _time.perf_counter()
+                out = jax.block_until_ready(fn(*args, **kw))
+                recorder.record(
+                    device=-1, klass=klass, phase=name,
+                    scalars=counts.get(name, 0),
+                    us=(_time.perf_counter() - t0) * 1e6, lanes=1)
+                return out
+            return timed_fn
+
+        return ProtocolStages(**{
+            name: wrap(name, getattr(self, name))
+            for name in ("encode", "worker_compute", "exchange", "decode",
+                         "front", "fused", "tags")})
+
+
+def _stage_scalars(plan: Optional["ProtocolPlan"]) -> Dict[str, int]:
+    """Per-stage scalar work units for one plan (the Cor. 8–10 counts the
+    calibration layer normalizes measured wall time by): encode touches
+    the 2N coded shares, worker_compute the N ξ-dominant block products,
+    exchange the ζ all-pairs traffic, decode the quorum's ``(m/t)²``
+    points; compositions sum their parts."""
+    if plan is None:
+        return {}
+    n, s, t, z, m = (plan.n_workers, plan.s, plan.t, plan.z, plan.m)
+    enc = 2 * n * (m * m) // (s * t)
+    wc = int(n * m ** 3 / (s * t * t))
+    exc = n * (n - 1) * m * m // (t * t)
+    dec = (t * t + z) * (m // t) ** 2
+    return {"encode": enc, "worker_compute": wc, "exchange": exc,
+            "decode": dec, "front": enc + wc + exc,
+            "fused": enc + wc + exc + dec, "tags": n * (m // t) ** 2}
+
 
 def _build_stages(plan: "ProtocolPlan") -> ProtocolStages:
     """Compile the staged programs for one plan (DESIGN.md §3, §5).

@@ -36,7 +36,7 @@ shared :class:`~repro.mpc.planner.ProtocolPlan`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional, Sequence, Tuple
+from typing import Iterable, Mapping, Optional, Sequence, Tuple
 
 from ..core.overheads import overheads
 
@@ -217,37 +217,131 @@ class WorkerPool:
                 runs.append([w.name, 1])
         return " + ".join(f"{c}×{nm}" for nm, c in runs)
 
+    # ----------------------------------------------------------- calibration
+    def recalibrated(self, multipliers: Mapping[str, Sequence[float]]
+                     ) -> "WorkerPool":
+        """This roster with measured per-class ``(ξ, σ, ζ)`` multipliers
+        applied to the hand-set rates (DESIGN.md §11).
 
-def modeled_makespan(m: int, s: int, t: int, z: int, n: int, cost,
-                     pool: WorkerPool, placement: Sequence[int],
-                     adversaries: int = 0) -> float:
-    """Per-slot µs makespan estimate for one coded ``m×m`` block.
+        ``multipliers`` maps a class *name* to the three per-resource
+        factors a calibration fit recovered
+        (:func:`repro.sim.calibrate.fit_class_multipliers`); classes not in
+        the map keep their rates.  Roster order — and therefore every
+        device id and placement — is preserved, so a recalibrated pool is
+        a drop-in replacement wherever the original was used.
+        """
+        ws = []
+        for w in self.workers:
+            mc, ms_, ml = multipliers.get(w.name, _UNIT)
+            ws.append(WorkerClass(name=w.name, compute=w.compute * mc,
+                                  storage=w.storage * ms_, link=w.link * ml))
+        return WorkerPool(workers=tuple(ws))
 
-    The per-slot refinement of the ranking objective (which is the
-    conservative bottleneck bound — see :meth:`repro.mpc.autotune.CostModel
-    .block`): slot ``i`` on device ``d = placement[i]`` pays its own ξ·σ
-    scaled by the device rates plus its communication share — the
-    ``(N−1)·m²/t²`` all-pairs phase-2 exchange and, for the first ``t²+z``
-    slots (the default decode quorum), one extra ``m²/t²`` upload of its
-    ``I(α)`` block to the master.  The makespan is the slowest slot.  This
-    is the measured-win metric of the ``hetero_tune_*`` bench pairs: under
-    it, placement *ordering* matters (the quorum term), not only device
-    selection.
+    def modeled_makespan(self, m: int, s: int, t: int, z: int, n: int,
+                         cost, placement: Sequence[int],
+                         adversaries: int = 0, waves: float = 1.0) -> float:
+        """Per-slot µs makespan for one coded block on this roster — the
+        method form of :func:`modeled_makespan` (one shared formula for the
+        model, the bench pairs and the fleet simulator)."""
+        return modeled_makespan(m, s, t, z, n, cost, self, placement,
+                                adversaries=adversaries, waves=waves)
 
-    With an adversary budget (``adversaries > 0``) the master reads the
-    wider verified quorum ``t²+z+2a`` — those extra uploads carry the
-    MAC-checked redundancy that localizes liars (DESIGN.md §9).
+
+def dispatch_waves(n_workers: int, axis_size: Optional[int]) -> int:
+    """Serialized worker waves one block dispatch pays: ``ceil(N / D)``
+    when the N logical workers pack onto a ``D``-device mesh axis
+    round-robin (``ShardedBackend.dispatch_scale``), 1 when every worker
+    has its own lane (``axis_size=None``).  The one wave formula shared by
+    the backend's dispatch scale, :func:`modeled_makespan` and the fleet
+    simulator's replay clock (DESIGN.md §11)."""
+    if axis_size is None:
+        return 1
+    d = int(axis_size)
+    if d < 1:
+        raise ValueError(f"axis_size must be >= 1, got {axis_size}")
+    return -(-int(n_workers) // d)
+
+
+def slot_scalars(m: int, s: int, t: int, z: int, n: int,
+                 n_slots: int, adversaries: int = 0
+                 ) -> Tuple[Tuple[float, float, float], ...]:
+    """Raw per-slot ``(ξ, σ, comm)`` scalar counts for one coded block —
+    device-independent work units.
+
+    ξ and σ are the Cor. 8–10 per-worker counts; the communication
+    column is slot-dependent: every slot pays the ``(N−1)·m²/t²``
+    all-pairs phase-2 exchange, and the first ``t²+z(+2a)`` slots (the
+    decode quorum; the verified quorum under an adversary budget,
+    DESIGN.md §9) one extra ``m²/t²`` upload of their ``I(α)`` block to
+    the master.  :func:`slot_times` turns these into µs; the fleet
+    simulator records them as the ``scalars`` column of its phase
+    samples so calibration can normalize measured time by work
+    (DESIGN.md §11).
     """
     ov = overheads(m, s, t, z, n)
     per_worker_comm = (n - 1) * m * m / (t * t)
     upload = m * m / (t * t)
     t2z = t * t + z + 2 * adversaries
-    worst = 0.0
-    for slot, dev in enumerate(placement):
+    return tuple(
+        (ov.computation, ov.storage,
+         per_worker_comm + (upload if slot < t2z else 0.0))
+        for slot in range(n_slots))
+
+
+def slot_times(m: int, s: int, t: int, z: int, n: int, cost,
+               pool: WorkerPool, placement: Sequence[int],
+               adversaries: int = 0
+               ) -> Tuple[Tuple[float, float, float], ...]:
+    """Per-slot ``(compute, storage, communication)`` µs triples for one
+    coded ``m×m`` block — THE per-slot cost formula.
+
+    Slot ``i`` on device ``d = placement[i]`` pays the
+    :func:`slot_scalars` work units scaled by the cost model's µs/scalar
+    weights and the device's per-resource rates.
+
+    :func:`modeled_makespan` reduces these triples to the slowest slot;
+    the fleet simulator (:mod:`repro.sim.replay`) multiplies exactly the
+    same triples by per-device truth multipliers and jitter — so the
+    modeled and the simulated makespan share one formula by construction,
+    and divergence between them measures *calibration* error, never
+    formula drift (DESIGN.md §11).
+    """
+    raw = slot_scalars(m, s, t, z, n, len(placement), adversaries)
+    out = []
+    for (xi, sg, comm), dev in zip(raw, placement):
         w = pool.workers[int(dev)]
-        comm = per_worker_comm + (upload if slot < t2z else 0.0)
-        us = (cost.computation * ov.computation * w.compute
-              + cost.storage * ov.storage * w.storage
-              + cost.communication * comm * w.link)
-        worst = max(worst, us)
-    return worst
+        out.append((cost.computation * xi * w.compute,
+                    cost.storage * sg * w.storage,
+                    cost.communication * comm * w.link))
+    return tuple(out)
+
+
+def modeled_makespan(m: int, s: int, t: int, z: int, n: int, cost,
+                     pool: WorkerPool, placement: Sequence[int],
+                     adversaries: int = 0, waves: float = 1.0) -> float:
+    """Per-slot µs makespan estimate for one coded ``m×m`` block.
+
+    The per-slot refinement of the ranking objective (which is the
+    conservative bottleneck bound — see :meth:`repro.mpc.autotune.CostModel
+    .block`): the slowest slot's ``(compute + storage + communication)``
+    total over the :func:`slot_times` triples.  This is the measured-win
+    metric of the ``hetero_tune_*`` bench pairs: under it, placement
+    *ordering* matters (the quorum term), not only device selection.
+
+    ``waves`` folds the backend's dispatch wave structure into the model
+    (DESIGN.md §8): a backend that serializes its worker phases —
+    ``ceil(N/D)`` mesh waves on the sharded runner
+    (:func:`dispatch_waves`, ``ShardedBackend.dispatch_scale``) — pays the
+    worst slot once per wave, so the block completes at ``waves ×`` the
+    single-wave makespan.  The default 1.0 is the all-lanes-parallel
+    local/batched model and keeps legacy call sites bit-identical.
+
+    With an adversary budget (``adversaries > 0``) the master reads the
+    wider verified quorum ``t²+z+2a`` — those extra uploads carry the
+    MAC-checked redundancy that localizes liars (DESIGN.md §9).
+    """
+    if waves < 1.0:
+        raise ValueError(f"waves must be >= 1, got {waves}")
+    times = slot_times(m, s, t, z, n, cost, pool, placement,
+                       adversaries=adversaries)
+    return waves * max(sum(triple) for triple in times)

@@ -189,3 +189,45 @@ def test_session_mirrors_scheduler_stats():
     assert sess.stats["waves"] >= 1
     assert sess.stats["padded_lanes"] >= 0
     assert sess.stats["deferred_groups"] == 0
+
+
+# --------------------------------------------- bounded deferral property
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dep: deterministic fallback sweeps
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_bad=st.integers(1, 4),      # queue depth in the degraded group
+    n_ok=st.integers(1, 4),       # queue depth in the healthy group
+    kills=st.integers(1, 10),     # attrition depth forcing the replan
+    inflight=st.sampled_from([None, 1, 2]),
+)
+def test_degraded_group_never_starved(n_bad, n_ok, kills, inflight):
+    """Bounded deferral: deferring a degraded group behind healthy ones
+    is a reordering, never starvation — whatever the queue depths, the
+    attrition level and the per-turn budget, every submitted request
+    lands in results ∪ failures and no queue survives the flush."""
+    eng = MPCEngine(spares=2, max_batch=8, inflight=inflight)
+    rng = np.random.default_rng(n_bad * 100 + n_ok * 10 + kills)
+    prm_bad = dict(s=2, t=2, z=2, m=8)
+    proto = AGECMPCProtocol(**prm_bad)
+    # kill up to the replan escalation point, never below recovery
+    kills = min(kills, proto.n_workers - proto.recovery_threshold)
+    eng.fail(list(range(kills)), **prm_bad)
+    want = _submit_n(eng, n_bad, prm=prm_bad, rng=rng)
+    want.update(_submit_n(eng, n_ok, prm=dict(s=3, t=2, z=2, m=12),
+                          rng=rng, key0=500))
+    results = eng.flush()
+    served = set(results) | set(eng.failures)
+    assert served == set(want), "a request was starved"
+    for rid, y in want.items():
+        if rid in results:
+            np.testing.assert_array_equal(np.asarray(results[rid]), y,
+                                          err_msg=f"request {rid}")
+    assert not eng.failures, "attrition within spares must not fail"
+    assert eng.pending() == 0, "flush left requests queued"

@@ -479,6 +479,69 @@ class TestCostModelFromBench:
         assert res.best.n_workers <= 17
 
 
+class TestFromBenchWarnings:
+    """A fallback to paper weights is never silent: each degraded path
+    emits a CalibrationWarning naming what went wrong, so a serving
+    stack misconfigured onto default weights is visible in logs."""
+
+    def _write(self, path, rows):
+        TestCostModelFromBench._write(self, path, rows)
+
+    def test_missing_file_warns(self, tmp_path):
+        from repro.mpc.autotune import CalibrationWarning
+
+        with pytest.warns(CalibrationWarning, match="unreadable"):
+            cm = CostModel.from_bench(str(tmp_path / "nope.json"))
+        assert cm == CostModel()
+
+    def test_malformed_json_warns(self, tmp_path):
+        from repro.mpc.autotune import CalibrationWarning
+
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        with pytest.warns(CalibrationWarning, match="not valid JSON"):
+            assert CostModel.from_bench(str(bad)) == CostModel()
+
+    def test_too_few_samples_warns(self, tmp_path):
+        from repro.mpc.autotune import CalibrationWarning
+
+        empty = tmp_path / "empty.json"
+        empty.write_text("[]")
+        with pytest.warns(CalibrationWarning, match="0 usable"):
+            assert CostModel.from_bench(str(empty)) == CostModel()
+        rng = np.random.default_rng(2)
+        thin = tmp_path / "thin.json"
+        xi, sg, zt = rng.uniform(1e4, 1e6, 3)
+        self._write(thin, [(xi, sg, zt, xi + sg + zt)] * 2)
+        with pytest.warns(CalibrationWarning, match="2 usable"):
+            assert CostModel.from_bench(str(thin)) == CostModel()
+
+    def test_degenerate_fit_warns(self, tmp_path):
+        """Collinear rows (identical xi/sigma/zeta in every sample) have
+        no lstsq signal — the fit is degenerate, not just noisy."""
+        from repro.mpc.autotune import CalibrationWarning
+
+        f = tmp_path / "flat.json"
+        self._write(f, [(1e5, 1e5, 1e5, 0.0)] * 8)
+        with pytest.warns(CalibrationWarning, match="degenerate"):
+            assert CostModel.from_bench(str(f)) == CostModel()
+
+    def test_healthy_fit_warns_nothing(self, tmp_path):
+        import warnings as _warnings
+
+        f = tmp_path / "BENCH_PROTOCOL.json"
+        rng = np.random.default_rng(3)
+        rows = []
+        for _ in range(12):
+            xi, sg, zt = rng.uniform(1e4, 1e6, 3)
+            rows.append((xi, sg, zt, 2.0 * xi + 0.25 * sg + 0.5 * zt))
+        self._write(f, rows)
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            cm = CostModel.from_bench(str(f))
+        assert cm.computation == pytest.approx(2.0, rel=1e-3)
+
+
 # ======================================================= sharded dispatch
 class TestShardedDispatch:
     def test_with_dispatch_scale(self):
