@@ -128,12 +128,12 @@ def main():
                      rng.integers(0, eproto.field.p, (em, em)),
                      jax.random.PRNGKey(i)) for i in range(bs)]
 
-            def serve_batched():
+            def serve_batched(reqs=reqs, em=em):
                 for aa, bb, k in reqs:
                     eng.submit(aa, bb, key=k, s=s, t=t, z=z, m=em)
                 return eng.flush()
 
-            def serve_sequential():
+            def serve_sequential(reqs=reqs, eproto=eproto):
                 return [np.asarray(eproto.run(aa, bb, k))
                         for aa, bb, k in reqs]
 
@@ -433,7 +433,7 @@ def cbatch_pairs(records, *, quick: bool = False):
 
     ys_new = flush_through(adaptive)
     ys_old = flush_through(legacy)
-    assert all(np.array_equal(n, o) for n, o in zip(ys_new, ys_old)), \
+    assert all(np.array_equal(n, o) for n, o in zip(ys_new, ys_old, strict=True)), \
         "wave-admission flush diverged from legacy waves"
     iters, best_of = (2, 1) if quick else (3, 2)
     us_new = time_us(flush_through, adaptive, iters=iters, warmup=0,
@@ -471,7 +471,7 @@ def cbatch_pairs(records, *, quick: bool = False):
 
     got, sched = continuous()
     want = sequential()
-    assert all(np.array_equal(g, w) for g, w in zip(got, want)), \
+    assert all(np.array_equal(g, w) for g, w in zip(got, want, strict=True)), \
         "paged serving diverged from the seed loop"
     static_blocks = 4 * sched.alloc.blocks_for(max_len)
     us_paged = time_us(lambda: continuous()[0], iters=iters, warmup=0,

@@ -77,7 +77,7 @@ got = cal.multipliers["phone"]
 print(f"planted phone multipliers {planted['phone']} -> recovered "
       f"({got[0]:.2f}, {got[1]:.2f}, {got[2]:.2f}) "
       f"from {cal.samples_used} phase samples")
-assert all(abs(g - p) / p < 0.15 for g, p in zip(got, planted["phone"]))
+assert all(abs(g - p) / p < 0.15 for g, p in zip(got, planted["phone"], strict=True))
 before = predicted_makespan(oblivious, cost=cost)
 after = predicted_makespan(oblivious, cost=cal.cost)
 print(f"recalibrated model: oblivious block makespan {before:.3e} -> "
@@ -86,6 +86,6 @@ print(f"recalibrated model: oblivious block makespan {before:.3e} -> "
 # ---- 5. the CI gate, end to end ----------------------------------------
 report = gate(seed=0)
 assert report.ok, f"divergence gate failed: {report.describe()}"
-print(f"divergence gate OK: "
+print("divergence gate OK: "
       + ", ".join(f"{e.label} ratio {e.ratio:.3f}" for e in report.entries))
 print("fleet sim demo OK")

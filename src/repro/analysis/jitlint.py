@@ -1,0 +1,305 @@
+"""Jit-stability lint: AST rules for trace-breaking hazards (DESIGN.md §12).
+
+The serve/engine hot loops are only fast because each compiles to a small,
+stable set of jit programs; the hazards that silently break that —
+host syncs in the middle of a dispatch chain, Python control flow on
+traced values, positional static/donate indices that rot under signature
+changes, reading a donated buffer after the call consumed it, array
+allocation shapes that vary per loop iteration — leave no test failure,
+just retrace storms and device↔host stalls.  Each rule here flags the
+*pattern*; the audited legacy sites live in ``analysis-baseline.json``
+and intentional ones carry ``# analysis: allow(<rule>): reason``.
+
+Rules
+-----
+``host-sync``        ``.item()``, ``jax.block_until_ready``, ``np.asarray``
+                     / ``np.array`` on traced data — each is a device→host
+                     round-trip that serializes the dispatch pipeline.
+``traced-branch``    ``if``/``while`` testing a *traced parameter* of a
+                     jit-decorated function: a `TracerBoolConversionError`
+                     at best, a silently specialized program at worst.
+``static-argnums``   ``jax.jit(..., static_argnums=…)``: positional
+                     indices silently re-bind when a parameter is added;
+                     prefer ``static_argnames``.
+``donated-reuse``    an argument at a ``donate_argnums`` position whose
+                     buffer is read again without being reassigned from
+                     the call's results.
+``shape-loop``       array constructors (``zeros``/``ones``/``full``/
+                     ``arange``/…) whose shape depends on the loop
+                     variable — every iteration traces a new program.
+``no-bare-assert``   bare ``assert`` in ``src/``: stripped under
+                     ``python -O``; raise a structured exception from
+                     :mod:`repro.mpc.errors` instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .report import Finding, is_suppressed, read_source
+
+RULES = ("host-sync", "traced-branch", "static-argnums", "donated-reuse",
+         "shape-loop", "no-bare-assert")
+
+_SYNC_ATTRS = {"item", "block_until_ready", "device_get"}
+_NP_SYNC_FUNCS = {"asarray", "array"}
+_ALLOC_FUNCS = {"zeros", "ones", "full", "empty", "arange", "eye",
+                "linspace"}
+_ARRAY_MODULES = {"np", "numpy", "jnp"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` as a string, or None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _is_jit_expr(node: ast.AST) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` / ``partial(jax.jit, ...)`` call configuring a
+    jit program, or None."""
+    if not isinstance(node, ast.Call):
+        return None
+    fn = _dotted(node.func)
+    if fn in ("jax.jit", "jit"):
+        return node
+    if fn in ("functools.partial", "partial") and node.args:
+        inner = _dotted(node.args[0])
+        if inner in ("jax.jit", "jit"):
+            return node
+    return None
+
+
+def _static_names(call: ast.Call, params: Sequence[str]) -> Set[str]:
+    """Parameter names jit treats as static for this configuration."""
+    static: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    static.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(params):
+                        static.add(params[n.value])
+    return static
+
+
+def _donated_indices(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return tuple(n.value for n in ast.walk(kw.value)
+                         if isinstance(n, ast.Constant)
+                         and isinstance(n.value, int))
+    return ()
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: str, lines: Sequence[str],
+                 rules: Sequence[str]):
+        self.path = path
+        self.lines = lines
+        self.rules = set(rules)
+        self.findings: List[Finding] = []
+        #: local name / self-attr -> donated positional indices
+        self.donating: Dict[str, Tuple[int, ...]] = {}
+        self._loop_vars: List[Set[str]] = []
+
+    # ------------------------------------------------------------- helpers
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        if rule not in self.rules:
+            return
+        line = getattr(node, "lineno", 1)
+        if is_suppressed(rule, self.lines, line):
+            return
+        snippet = self.lines[line - 1] if line <= len(self.lines) else ""
+        self.findings.append(Finding(rule=rule, file=self.path, line=line,
+                                     message=message,
+                                     snippet=snippet.strip()))
+
+    # --------------------------------------------------------- assignments
+    def visit_Assign(self, node: ast.Assign) -> None:
+        jit = _is_jit_expr(node.value)
+        if jit is not None:
+            donated = _donated_indices(jit)
+            if donated:
+                for tgt in node.targets:
+                    name = _dotted(tgt)
+                    if name:
+                        self.donating[name] = donated
+        self.generic_visit(node)
+
+    # --------------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = _dotted(node.func)
+        # host-sync: numpy materialization / explicit device barriers
+        if fn is not None:
+            head, _, tail = fn.rpartition(".")
+            if head in ("np", "numpy") and tail in _NP_SYNC_FUNCS:
+                self._emit("host-sync", node,
+                           f"{fn}(...) materializes device data on the "
+                           f"host (blocking transfer)")
+            elif tail == "block_until_ready" or fn == "block_until_ready":
+                self._emit("host-sync", node,
+                           "block_until_ready stalls the dispatch "
+                           "pipeline until the device drains")
+            elif tail == "item" and not node.args and not node.keywords:
+                self._emit("host-sync", node,
+                           ".item() synchronously pulls a scalar from "
+                           "the device")
+        # static-argnums on a jit configuration
+        jit = _is_jit_expr(node)
+        if jit is not None and any(kw.arg == "static_argnums"
+                                   for kw in jit.keywords):
+            self._emit("static-argnums", node,
+                       "positional static_argnums silently re-binds when "
+                       "the signature changes; use static_argnames")
+        # shape-loop: loop-variable-dependent allocation
+        if (self._loop_vars and fn is not None
+                and fn.rpartition(".")[0] in _ARRAY_MODULES
+                and fn.rpartition(".")[2] in _ALLOC_FUNCS):
+            live = set().union(*self._loop_vars)
+            used = set()
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                used |= _names_in(arg)
+            hits = sorted(live & used)
+            if hits:
+                self._emit("shape-loop", node,
+                           f"allocation shape depends on loop "
+                           f"variable(s) {hits}: retraces every iteration")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------- donated reuse
+    def _check_donated_call(self, stmt: ast.stmt, call: ast.Call) -> None:
+        name = _dotted(call.func)
+        donated = self.donating.get(name or "")
+        if not donated:
+            return
+        targets: List[str] = []
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                targets += [t for t in (_dotted(e) for e in elts) if t]
+        for idx in donated:
+            if idx >= len(call.args):
+                continue
+            arg = _dotted(call.args[idx])
+            if arg and arg not in targets:
+                self._emit("donated-reuse", call,
+                           f"argument {arg!r} (position {idx}) is donated "
+                           f"to {name!r} but not reassigned from its "
+                           f"results; later reads touch a freed buffer")
+
+    # --------------------------------------------------------------- loops
+    def visit_For(self, node: ast.For) -> None:
+        self._loop_vars.append(_names_in(node.target))
+        self.generic_visit(node)
+        self._loop_vars.pop()
+
+    def visit_While(self, node: ast.While) -> None:
+        self._loop_vars.append(set())
+        self.generic_visit(node)
+        self._loop_vars.pop()
+
+    # ----------------------------------------------------------- functions
+    def _visit_function(self, node) -> None:
+        jit_call = None
+        for dec in node.decorator_list:
+            if _dotted(dec) in ("jax.jit", "jit"):
+                jit_call = ast.Call(func=dec, args=[], keywords=[])
+            else:
+                maybe = _is_jit_expr(dec)
+                if maybe is not None:
+                    jit_call = maybe
+        if jit_call is not None:
+            params = [a.arg for a in (node.args.posonlyargs
+                                      + node.args.args)]
+            static = _static_names(jit_call, params)
+            traced = set(params) - static - {"self"}
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.If, ast.While)):
+                    hits = sorted(_names_in(sub.test) & traced)
+                    if hits:
+                        self._emit(
+                            "traced-branch", sub,
+                            f"Python branch on traced parameter(s) "
+                            f"{hits} inside jit-compiled "
+                            f"{node.name!r}")
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # --------------------------------------------------------------- misc
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._emit("no-bare-assert", node,
+                   "bare assert is stripped under python -O; raise a "
+                   "structured exception (repro.mpc.errors)")
+        self.generic_visit(node)
+
+
+def _stmt_map(tree: ast.Module) -> Dict[ast.AST, Optional[ast.stmt]]:
+    """Each node's nearest enclosing statement (for donated-reuse)."""
+    out: Dict[ast.AST, Optional[ast.stmt]] = {}
+
+    def walk(node: ast.AST, stmt: Optional[ast.stmt]) -> None:
+        for child in ast.iter_child_nodes(node):
+            here = child if isinstance(child, ast.stmt) else stmt
+            out[child] = here
+            walk(child, here)
+
+    walk(tree, None)
+    return out
+
+
+def lint_file(path: str, rules: Sequence[str] = RULES) -> List[Finding]:
+    """All unsuppressed findings for one file (empty for non-Python or
+    unparsable files — syntax errors are the ruff gate's job)."""
+    src = read_source(path)
+    if src is None:
+        return []
+    text, lines = src
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return []
+    lint = _FileLint(path, lines, rules)
+    lint.visit(tree)
+    # donated-reuse needs each call's statement context: one linear pass
+    stmt_of = _stmt_map(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            stmt = stmt_of.get(node)
+            if stmt is not None:
+                lint._check_donated_call(stmt, node)
+    lint.findings.sort(key=lambda f: (f.line, f.rule))
+    return lint.findings
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Sequence[str] = RULES) -> List[Finding]:
+    import os
+
+    findings: List[Finding] = []
+    for root in paths:
+        if os.path.isfile(root):
+            files: Iterable[str] = [root]
+        else:
+            files = sorted(
+                os.path.join(dp, f)
+                for dp, _, fs in os.walk(root) for f in fs
+                if f.endswith(".py"))
+        for f in files:
+            findings.extend(lint_file(f, rules))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return findings

@@ -105,7 +105,7 @@ class CheckpointManager:
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(leaves_like))
         out = []
-        for (p, leaf), sh in zip(leaves_like, shard_leaves):
+        for (p, leaf), sh in zip(leaves_like, shard_leaves, strict=True):
             key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                            for k in p)
             arr = flat[key]

@@ -1,4 +1,5 @@
-"""granite-3-2b — dense 40L d2048 32H(kv8) ff8192 v49155 [hf:ibm-granite/granite-3.0-2b-base]."""
+"""granite-3-2b — dense 40L d2048 32H(kv8) ff8192 v49155
+[hf:ibm-granite/granite-3.0-2b-base]."""
 from ..models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,4 +1,5 @@
-"""llama3.2-1b — dense 16L d2048 32H(kv8) ff8192 v128256 [hf:meta-llama/Llama-3.2-1B]."""
+"""llama3.2-1b — dense 16L d2048 32H(kv8) ff8192 v128256
+[hf:meta-llama/Llama-3.2-1B]."""
 from ..models.config import ModelConfig
 
 CONFIG = ModelConfig(

@@ -1,4 +1,5 @@
-"""olmoe-1b-7b — MoE 16L d2048 16H(kv16) 64e top-8 ff_e1024 v50304 [arXiv:2409.02060]."""
+"""olmoe-1b-7b — MoE 16L d2048 16H(kv16) 64e top-8 ff_e1024 v50304
+[arXiv:2409.02060]."""
 from ..models.config import ModelConfig, MoEConfig
 
 CONFIG = ModelConfig(

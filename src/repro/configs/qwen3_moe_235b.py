@@ -1,4 +1,5 @@
-"""qwen3-moe-235b-a22b — MoE 94L d4096 64H(kv4) 128e top-8 ff_e1536 v151936 [hf:Qwen]."""
+"""qwen3-moe-235b-a22b — MoE 94L d4096 64H(kv4) 128e top-8 ff_e1536
+v151936 [hf:Qwen]."""
 from ..models.config import ModelConfig, MoEConfig
 
 CONFIG = ModelConfig(

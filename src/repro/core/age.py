@@ -141,13 +141,19 @@ class GeneralizedPolyCode:
     # -------------------------------------------------------------- validity
     def check_conditions(self) -> None:
         """Assert C1-C3 of eq. (5) hold (garbage never hits important powers)."""
+        # lazy: repro.mpc.planner imports this module at package init
+        from ..mpc.errors import InvariantError
+
         imp = self.important_powers
         c1 = _sumset(self.coded_powers_a, self.secret_powers_b)
         c2 = _sumset(self.secret_powers_a, self.coded_powers_b)
         c3 = _sumset(self.secret_powers_a, self.secret_powers_b)
-        assert not (imp & c1), "C1 violated"
-        assert not (imp & c2), "C2 violated"
-        assert not (imp & c3), "C3 violated"
+        for name, clash in (("C1", imp & c1), ("C2", imp & c2),
+                            ("C3", imp & c3)):
+            if clash:
+                raise InvariantError(
+                    f"{name} violated for {self!r}: garbage powers "
+                    f"{sorted(clash)[:4]} hit important powers")
 
     def check_decodable(self) -> None:
         """Theorem 1: important powers are distinct and untouched by garbage.
@@ -155,8 +161,13 @@ class GeneralizedPolyCode:
         (i) |important| == t² and (ii) no overlap between the j=k diagonal
         terms and the j≠k cross terms of ``C_A·C_B``.
         """
+        from ..mpc.errors import InvariantError
+
         imp = self.important_powers
-        assert len(imp) == self.t * self.t, "important powers collide (Thm 1 i)"
+        if len(imp) != self.t * self.t:
+            raise InvariantError(
+                f"important powers collide (Thm 1 i) for {self!r}: "
+                f"|imp|={len(imp)} != t²={self.t * self.t}")
         cross = frozenset(
             j * self.alpha + i * self.beta
             + (self.s - 1 - k) * self.alpha + self.theta * l
@@ -166,7 +177,10 @@ class GeneralizedPolyCode:
             for k in range(self.s)
             if j != k
         )
-        assert not (imp & cross), "garbage overlaps important powers (Thm 1 ii)"
+        if imp & cross:
+            raise InvariantError(
+                f"garbage overlaps important powers (Thm 1 ii) for "
+                f"{self!r}: {sorted(imp & cross)[:4]}")
 
 
 # --------------------------------------------------------------------- AGE --
@@ -223,5 +237,7 @@ def optimal_age_code(s: int, t: int, z: int) -> Tuple[AGECode, int]:
         code = AGECode(s, t, z, lam)
         if best is None or code.n_workers <= best[0].n_workers:
             best = (code, lam)
-    assert best is not None
+    if best is None:
+        from ..mpc.errors import InvariantError
+        raise InvariantError(f"no AGE gap in [0, z={z}] produced a code")
     return best

@@ -12,7 +12,7 @@ both.
 """
 from __future__ import annotations
 
-from .age import AGECode, GeneralizedPolyCode, optimal_age_code, polydot_code
+from .age import optimal_age_code, polydot_code
 
 
 # ----------------------------------------------------------------- Theorem 3

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..mpc.errors import ShapeContractError
+
 NEG_INF = -1e30
 
 
@@ -84,7 +86,10 @@ def flash_attention(
     """q: [B, T, Hq, D]; k, v: [B, S, Hkv, D]; Hq % Hkv == 0 → [B, T, Hq, D]."""
     b, tq, hq, d = q.shape
     _, s, hkv, _ = k.shape
-    assert hq % hkv == 0, (hq, hkv)
+    if hq % hkv:
+        raise ShapeContractError(
+            f"GQA needs Hq divisible by Hkv: got Hq={hq}, Hkv={hkv}",
+            shapes=(q.shape, k.shape))
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     bq_, bk_ = min(bq, tq), min(bk, s)

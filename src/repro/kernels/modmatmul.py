@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..mpc.errors import ShapeContractError
 from ..mpc.field import acc_window
 from .barrett import mod_p
 
@@ -77,13 +78,25 @@ def _modmatmul_batched_kernel(a_ref, b_ref, o_ref, *, p: int, n_k: int):
 
 
 def _pick_blocks(m, n, k, bm, bn, bk, p):
-    window = acc_window(p)
+    # The interval-analysis certificate (repro.analysis.overflow) derives
+    # the largest provably-safe K block independently of acc_window's
+    # closed form; the two must agree, so the kernel consumes the proof.
+    # Lazy import: repro.kernels.__init__ imports this module, and the
+    # verifier imports repro.kernels.barrett.
+    from ..analysis.overflow import certified_bk
+    window = certified_bk(p)
+    if window != acc_window(p):
+        raise ValueError(
+            f"certified_bk({p})={window} disagrees with acc_window="
+            f"{acc_window(p)}: the overflow certificate and the closed "
+            "form diverged — refuse to pick a block size")
     if bk is None:
         bk = min(512, window)   # VMEM-sized default, clamped to the window
     if bk > window:
         raise ValueError(
             f"bk={bk} > acc_window({p})={window}: the int64 chunk-then-fold "
-            "window would overflow (see repro.mpc.field.acc_window)")
+            "accumulator would overflow (certified by "
+            "repro.analysis.overflow.certified_bk)")
     bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
     mp = -(-m // bm_) * bm_
     np_ = -(-n // bn_) * bn_
@@ -112,7 +125,10 @@ def modmatmul(
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
+    if k != k2:
+        raise ShapeContractError(
+            f"modmatmul inner dims disagree: {a.shape} @ {b.shape}",
+            shapes=(a.shape, b.shape))
     bm_, bn_, bk_, mp, np_, kp = _pick_blocks(m, n, k, bm, bn, bk, p)
     a = jnp.pad(a.astype(jnp.int64), ((0, mp - m), (0, kp - k)))
     b = jnp.pad(b.astype(jnp.int64), ((0, kp - k), (0, np_ - n)))
@@ -154,7 +170,10 @@ def modmatmul_batched(
     """
     w, m, k = a.shape
     w2, k2, n = b.shape
-    assert (w, k) == (w2, k2), (a.shape, b.shape)
+    if (w, k) != (w2, k2):
+        raise ShapeContractError(
+            f"batched modmatmul operands disagree: {a.shape} @ {b.shape}",
+            shapes=(a.shape, b.shape))
     bm_, bn_, bk_, mp, np_, kp = _pick_blocks(m, n, k, bm, bn, bk, p)
     a = jnp.pad(a.astype(jnp.int64), ((0, 0), (0, mp - m), (0, kp - k)))
     b = jnp.pad(b.astype(jnp.int64), ((0, 0), (0, kp - k), (0, np_ - n)))

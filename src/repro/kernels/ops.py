@@ -5,7 +5,6 @@ compiled on TPU) and the pure-jnp path; model code calls only these.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import ref

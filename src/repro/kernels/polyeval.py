@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..mpc.errors import ShapeContractError
 from ..mpc.field import acc_window
 from .barrett import mod_p
 
@@ -55,7 +56,10 @@ def polyeval(
     belongs to the chunked :func:`repro.kernels.modmatmul.modmatmul` path."""
     n, k = vand.shape
     k2, c = terms.shape
-    assert k == k2, (vand.shape, terms.shape)
+    if k != k2:
+        raise ShapeContractError(
+            f"polyeval needs vand [N,K] @ terms [K,C]: got {vand.shape} "
+            f"and {terms.shape}", shapes=(vand.shape, terms.shape))
     window = acc_window(p)
     if k > window:
         raise ValueError(

@@ -80,7 +80,9 @@ def rwkv6_chunked(r, k, v, w, u, *, chunk: int = 32, return_state: bool = False)
         # dt=0-like padding: decay 1 (w -> -inf gives ld=0? use ld=0 via
         # w=-inf is awkward; instead pad with zeros and zero r/k so padded
         # steps neither read nor write)
-        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def zpad(x):
+            return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
         r, k, v = zpad(r), zpad(k), zpad(v)
         w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
                     constant_values=30.0)  # exp(-exp(30)) ~ 0 decay? see note

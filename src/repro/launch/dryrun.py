@@ -272,7 +272,8 @@ def main():
             raise SystemExit(f"{len(failures)} cells failed: "
                              f"{[(a, s) for a, s, _ in failures]}")
         return
-    assert args.arch and args.shape, "--arch and --shape (or --all / --mpc)"
+    if not (args.arch and args.shape):
+        raise SystemExit("--arch and --shape (or --all / --mpc)")
     run_cell(args.arch, args.shape, multi_pod=args.multipod,
              out_dir=args.out)
 

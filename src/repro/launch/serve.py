@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config, reduced
 from ..models.api import get_model
+from ..mpc.errors import InvariantError
 from ..serve.engine import Engine
 
 
@@ -45,7 +46,9 @@ def main():
     toks = args.batch * args.max_new
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s); sample: {out[0][:8].tolist()}")
-    assert int(out.max()) < cfg.vocab
+    if int(out.max()) >= cfg.vocab:
+        raise InvariantError(
+            f"sampled token id {int(out.max())} outside vocab {cfg.vocab}")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,7 @@ allocated) + sharding trees for every (arch × shape × mesh) combination.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -194,11 +193,13 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         batch, b_shard = _batch_sds(cfg, shape, mesh, with_targets=False)
 
         if "embeds" in batch:
-            fn = lambda p, toks, emb: model.prefill(cfg, p, toks, embeds=emb)
+            def fn(p, toks, emb):
+                return model.prefill(cfg, p, toks, embeds=emb)
             args = (p_sds, batch["tokens"], batch["embeds"])
             shards = (p_shard, b_shard["tokens"], b_shard["embeds"])
         else:
-            fn = lambda p, toks: model.prefill(cfg, p, toks)
+            def fn(p, toks):
+                return model.prefill(cfg, p, toks)
             args = (p_sds, batch["tokens"])
             shards = (p_shard, b_shard["tokens"])
         return Cell(name=f"{cfg.name}:{shape.name}", fn=fn, args=args,
@@ -211,7 +212,9 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     token = sds((b, 1), jnp.int32)
     t_shard = _ns(mesh, spec_for((b, 1), ("batch", None), mesh))
     pos = sds((), jnp.int32)
-    fn = lambda p, c, tok, pp: model.decode_step(cfg, p, c, tok, pp)
+    def fn(p, c, tok, pp):
+        return model.decode_step(cfg, p, c, tok, pp)
+
     return Cell(
         name=f"{cfg.name}:{shape.name}",
         fn=fn, args=(p_sds, cache_sds, token, pos),

@@ -13,7 +13,6 @@ the compile-only path run in this container).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from ..mpc.errors import InvariantError
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -121,7 +123,9 @@ class ModelConfig:
         if self.family in ("dense", "vlm", "encdec"):
             return self._attn_params() + self._ffn_params(self.d_ff)
         if self.family == "moe":
-            assert self.moe
+            if self.moe is None:
+                raise InvariantError(
+                    f"family='moe' config {self.name!r} has no MoEConfig")
             n_e = self.moe.top_k if active_only else self.moe.n_experts
             router = self.d_model * self.moe.n_experts
             return (self._attn_params() + router

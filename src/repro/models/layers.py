@@ -8,7 +8,6 @@ return arrays.  Activation sharding happens through logical-axis annotations
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

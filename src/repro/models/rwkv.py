@@ -11,12 +11,12 @@ Decode carries (shift_tm, shift_cm, wkv_state) per layer — constant memory.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from ..mpc.errors import ShapeContractError
 from ..parallel.sharding import shard
 from .config import ModelConfig
 from .layers import rms_norm
@@ -29,7 +29,9 @@ def _dtype(cfg):
 
 
 def n_heads(cfg: ModelConfig) -> int:
-    assert cfg.d_model % HEAD_K == 0
+    if cfg.d_model % HEAD_K:
+        raise ShapeContractError(
+            f"rwkv needs d_model divisible by {HEAD_K}: got {cfg.d_model}")
     return cfg.d_model // HEAD_K
 
 

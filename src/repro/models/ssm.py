@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..mpc.errors import InvariantError
 from ..parallel.sharding import shard
 from .config import ModelConfig, SSMConfig
 
@@ -123,7 +124,9 @@ def mamba_block(cfg: ModelConfig, x, p, *, conv_state=None, ssm_state=None,
 
     if decode:
         # one step: h = exp(dt·a)·h + dt·b·u
-        assert ssm_state is not None
+        if ssm_state is None:
+            raise InvariantError("ssm decode step reached without a "
+                                 "recurrent state (prefill must seed it)")
         u1, dt1, b1, c1 = xi[:, 0], dt[:, 0], b_t[:, 0], c_t[:, 0]
         decay = jnp.exp(dt1[..., None].astype(jnp.float32) * a[None])
         inc = (dt1 * u1)[..., None].astype(jnp.float32) * \

@@ -37,7 +37,6 @@ def init_params(cfg: ModelConfig, key) -> dict:
     d, hd = cfg.d_model, cfg.resolved_head_dim
     vp = cfg.padded_vocab()
     keys = jax.random.split(key, 12)
-    init = jax.nn.initializers.normal(d ** -0.5)
 
     def mk(k, shape, scale_dim=None):
         s = (scale_dim or d) ** -0.5

@@ -10,11 +10,11 @@ learned positions on the decoder.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..mpc.errors import ShapeContractError
 from ..parallel.sharding import shard
 from .config import ModelConfig
 from .layers import KVCache, attention_chunked, decode_attention
@@ -164,7 +164,8 @@ def decode_train(cfg: ModelConfig, params, tokens, enc_out):
 
 def forward(cfg: ModelConfig, params, tokens, embeds=None):
     """embeds = encoder frames (stub).  Returns (hidden, aux)."""
-    assert embeds is not None, "whisper needs frame embeddings"
+    if embeds is None:
+        raise ShapeContractError("whisper needs frame embeddings")
     enc = encode(cfg, params, embeds)
     hid = decode_train(cfg, params, tokens, enc)
     return hid, jnp.float32(0.0)
@@ -204,7 +205,8 @@ def loss_fn(cfg: ModelConfig, params, tokens, targets, *, seq_chunk=512,
 def prefill(cfg: ModelConfig, params, tokens, embeds=None):
     """Serving prefill: encode audio frames, run the decoder prompt, return
     last logits + (decoder self-KV, encoder output) cache."""
-    assert embeds is not None
+    if embeds is None:
+        raise ShapeContractError("whisper prefill needs frame embeddings")
     eps = cfg.norm_eps
     enc = encode(cfg, params, embeds)
     b, t = tokens.shape
@@ -271,7 +273,7 @@ def decode_step(cfg: ModelConfig, params, cache: WhisperCache, token, pos):
     x = params["embed"][token] + params["dec_pos"][pos][None, None].astype(
         _dtype(cfg))
     new_kv = []
-    for p, lc in zip(params["dec_layers"], cache.self_kv):
+    for p, lc in zip(params["dec_layers"], cache.self_kv, strict=True):
         h = layer_norm(x, p["norm1"]["scale"], p["norm1"]["bias"], eps)
         q = (h @ p["w_q"]).reshape(b, 1, cfg.n_heads, hd)
         k_new = (h @ p["w_k"]).reshape(b, 1, cfg.n_heads, hd)

@@ -280,7 +280,7 @@ class CostModel:
             a = xs[:, active]
             g = a.T @ a + 1e-8 * len(xs) * np.eye(len(active))
             wa = np.linalg.solve(g, a.T @ y)
-            neg = [i for i, wi in zip(active, wa) if wi < 0]
+            neg = [i for i, wi in zip(active, wa, strict=True) if wi < 0]
             if not neg:
                 w[:] = 0.0
                 w[active] = wa

@@ -203,6 +203,7 @@ def locate_errors(field: Field, alphas: Sequence[int], values: Sequence[int],
     for a_try in range(min(int(max_errors), (q - d) // 2), -1, -1):
         nq = d + a_try                       # Q = I·E has nq coefficients
         vq = vandermonde(field, al, np.arange(nq, dtype=np.int64))
+        # analysis: allow(shape-loop): host-side NumPy decode, never traced
         ve = vandermonde(field, al, np.arange(a_try, dtype=np.int64))
         lead = vandermonde(field, al, np.array([a_try], np.int64))[:, 0]
         mat = np.concatenate([vq, (-(y[:, None] * ve)) % p], axis=1)

@@ -58,3 +58,33 @@ class MaskShapeError(QuorumError, ValueError):
 
 class AdversaryBudgetError(QuorumError):
     """More corrupted shares than the spec's adversary budget ``a``."""
+
+
+class ShapeContractError(ValueError):
+    """Operands violate a kernel/model shape contract.
+
+    Raised where a bare ``assert`` used to guard operand shapes (inner
+    dims of a matmul, head-count divisibility, required embeddings, …).
+    A ``ValueError`` so generic callers keep working; distinct so the
+    ``no-bare-assert`` analyzer rule (:mod:`repro.analysis.jitlint`) has a
+    structured replacement to point at.  Carries the offending shapes on
+    ``shapes`` when the raiser knows them.
+    """
+
+    def __init__(self, message: str, *, shapes=None):
+        super().__init__(message)
+        self.shapes = None if shapes is None else tuple(shapes)
+
+
+class InvariantError(RuntimeError):
+    """A proven protocol/module invariant failed at runtime.
+
+    The theorem-backed checks (degree-set conditions C1–C3, Theorem 1
+    decodability, the ``acc_window`` module contract, sanity checks on
+    generated output) used to be bare ``assert``s — stripped under
+    ``python -O`` and indistinguishable from plain bugs.  They raise this
+    instead; the static prover (:mod:`repro.analysis.invariants`) checks
+    the same inequalities over the whole tuner-reachable space at analysis
+    time, so hitting one at runtime means the environment, not the math,
+    broke.
+    """

@@ -16,11 +16,11 @@ only with x64 enabled, so we enable it at import for this subpackage).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from .errors import InvariantError
 
 jax.config.update("jax_enable_x64", True)
 
@@ -44,7 +44,10 @@ def acc_window(p: int) -> int:
 # max #products accumulable in int64 before a fold, per field (derived)
 ACC_WINDOW = {P_DEFAULT: acc_window(P_DEFAULT),
               P_MERSENNE31: acc_window(P_MERSENNE31)}
-assert ACC_WINDOW[P_DEFAULT] == 2048  # the documented p = 2²⁶−5 contract
+if ACC_WINDOW[P_DEFAULT] != 2048:  # the documented p = 2²⁶−5 contract
+    raise InvariantError(
+        f"acc_window(P_DEFAULT) = {ACC_WINDOW[P_DEFAULT]}, expected 2048: "
+        f"the chunk-then-fold contract the kernels are certified against")
 
 
 def is_prime(n: int) -> bool:
@@ -70,7 +73,8 @@ def is_prime(n: int) -> bool:
     return True
 
 
-assert is_prime(P_DEFAULT) and is_prime(P_MERSENNE31)
+if not (is_prime(P_DEFAULT) and is_prime(P_MERSENNE31)):
+    raise InvariantError("a shipped field modulus is composite")
 
 
 @dataclasses.dataclass(frozen=True)

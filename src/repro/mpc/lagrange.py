@@ -34,7 +34,8 @@ from .montgomery import mont_ctx
 
 
 # --------------------------------------------------------------- vectorized
-def vandermonde(field: Field, alphas: Sequence[int], powers: Sequence[int]) -> np.ndarray:
+def vandermonde(field: Field, alphas: Sequence[int],
+                powers: Sequence[int]) -> np.ndarray:
     """V[n, m] = α_n ^ powers[m]  (mod p), int64 numpy.
 
     Vectorized square-and-multiply over the exponent bits (Montgomery

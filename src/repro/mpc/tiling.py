@@ -53,7 +53,9 @@ def n_tiles(m: int, r: int, k: int, c: int) -> int:
 
 def padded_volume(m: int, r: int, k: int, c: int) -> int:
     """Coded work proxy: the product of grid-padded dimensions."""
-    up = lambda d: (-(-d // m)) * m  # noqa: E731
+    def up(d):
+        return (-(-d // m)) * m
+
     return up(r) * up(k) * up(c)
 
 

@@ -308,7 +308,7 @@ def slot_times(m: int, s: int, t: int, z: int, n: int, cost,
     """
     raw = slot_scalars(m, s, t, z, n, len(placement), adversaries)
     out = []
-    for (xi, sg, comm), dev in zip(raw, placement):
+    for (xi, sg, comm), dev in zip(raw, placement, strict=True):
         w = pool.workers[int(dev)]
         out.append((cost.computation * xi * w.compute,
                     cost.storage * sg * w.storage,

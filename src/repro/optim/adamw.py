@@ -24,7 +24,9 @@ class AdamW:
     state_dtype: str = "float32"   # bfloat16 halves optimizer HBM (235B fit)
 
     def init(self, params) -> AdamWState:
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.dtype(self.state_dtype))
+        def zeros(p):
+            return jnp.zeros_like(p, dtype=jnp.dtype(self.state_dtype))
+
         return AdamWState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(zeros, params),

@@ -104,7 +104,7 @@ def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
         return P()
     spec = []
     used: set = set()
-    for dim, name in zip(shape, logical):
+    for dim, name in zip(shape, logical, strict=True):
         ax = _resolve(mesh, rules.get(name)) if name else None
         if ax is None:
             spec.append(None)

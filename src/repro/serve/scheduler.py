@@ -102,6 +102,9 @@ class ServeScheduler:
         self._tables = np.full((self.lanes, self.max_blocks), NULL_BLOCK,
                                np.int32)
         self._tok = np.zeros((self.lanes, 1), np.int32)
+        # per-lane next KV position, maintained incrementally at admit /
+        # retire / step so the hot step loop never rebuilds it per lane
+        self._pos = np.zeros(self.lanes, np.int32)
         self._lane: List[Optional[_Lane]] = [None] * self.lanes
         self._waiting: "deque[_Waiting]" = deque()
         self.finished: Dict[int, np.ndarray] = {}
@@ -114,6 +117,7 @@ class ServeScheduler:
     def submit(self, prompt, max_new: int, embeds=None) -> int:
         """Queue one request; returns its id (tokens land in
         :attr:`finished` once it retires).  ``prompt``: [T] or [1, T]."""
+        # analysis: allow(host-sync): request ingestion of host-side prompts
         prompt = np.atleast_2d(np.asarray(prompt, np.int32))
         if prompt.shape[0] != 1:
             raise ValueError(
@@ -171,6 +175,7 @@ class ServeScheduler:
             self._tables[free, :] = NULL_BLOCK
             self._tables[free, :nb] = blocks
             self._tok[free, 0] = tok
+            self._pos[free] = tp
             self.stats["peak_lanes"] = max(self.stats["peak_lanes"],
                                            self.active())
             if lane.remaining == 0:
@@ -178,11 +183,13 @@ class ServeScheduler:
 
     def _retire(self, i: int) -> None:
         lane = self._lane[i]
+        # analysis: allow(host-sync): token ids are host ints by now
         self.finished[lane.rid] = np.asarray(lane.out, np.int32)
         self.alloc.free(lane.blocks)
         self._lane[i] = None
         self._tables[i, :] = NULL_BLOCK
         self._tok[i, 0] = 0
+        self._pos[i] = 0
         self.stats["retired"] += 1
 
     # ---------------------------------------------------------------- step
@@ -216,12 +223,14 @@ class ServeScheduler:
                 f"cover the admitted working set")
         # masked step arrays: idle/stalled lanes run against the null block
         tables = np.where(runnable[:, None], self._tables, NULL_BLOCK)
-        pos = np.array([ln.pos if ln is not None and runnable[i] else 0
-                        for i, ln in enumerate(self._lane)], np.int32)
+        pos = np.where(runnable, self._pos, 0).astype(np.int32)
         logits, self.pool = self._step(
             self.params, self.pool, jnp.asarray(tables),
             jnp.asarray(self._tok), jnp.asarray(pos))
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        # the one per-step device→host readback: sampled tokens must reach
+        # the host to drive retire/admit decisions
+        # analysis: allow(host-sync): per-step token readback, by design
         tok = np.asarray(tok)
         self.stats["steps"] += 1
         for i in np.nonzero(runnable)[0]:
@@ -229,6 +238,7 @@ class ServeScheduler:
             lane.out.append(int(tok[i, 0]))
             self._tok[i, 0] = tok[i, 0]
             lane.pos += 1
+            self._pos[i] += 1
             lane.remaining -= 1
             if lane.remaining == 0:
                 self._retire(i)

@@ -106,7 +106,9 @@ def test_cost_model_weights_arbitrate_partitions():
     comm = tune(budget, z, shape, cost=CostModel(0.0, 0.0, 1.0))
     comp = tune(budget, z, shape, cost=CostModel(1.0, 0.0, 0.0))
     assert comm.best.n_workers <= comp.best.n_workers
-    st2 = lambda c: c.s * c.t * c.t  # noqa: E731
+    def st2(c):
+        return c.s * c.t * c.t
+
     assert st2(comp.best) >= st2(comm.best)
 
 
@@ -209,7 +211,9 @@ def test_pool_retune_beats_or_matches_replan_objective():
     alive = int(pool.alive.sum())
     assert tuned.n_workers <= alive and greedy.n_workers <= alive
     cm = DEFAULT_COST
-    score = lambda pr: cm.total(8, pr.s, pr.t, 2, pr.n_workers, 1)  # noqa: E731
+    def score(pr):
+        return cm.total(8, pr.s, pr.t, 2, pr.n_workers, 1)
+
     assert score(tuned) <= score(greedy)
 
 

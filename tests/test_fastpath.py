@@ -223,7 +223,7 @@ def test_montgomery_pow_matches_python_pow():
     exps = rng.integers(0, 1000, 64)
     got = ctx.pow(bases, exps)
     want = np.array([pow(int(b), int(e), P_DEFAULT)
-                     for b, e in zip(bases, exps)], np.int64)
+                     for b, e in zip(bases, exps, strict=True)], np.int64)
     np.testing.assert_array_equal(got, want)
 
 

@@ -3,7 +3,7 @@ import itertools
 
 import pytest
 
-from repro.core.age import optimal_age_code, polydot_code
+from repro.core.age import polydot_code
 from repro.core.overheads import overheads, scheme_overheads
 from repro.core.worker_counts import (
     n_age_cmpc,
@@ -81,7 +81,8 @@ def test_overheads_formulas():
     """Cor. 8-10 at Example 1's operating point (m=4, s=t=z=2, N=17)."""
     m, s, t, z, n = 4, 2, 2, 2, 17
     o = overheads(m, s, t, z, n)
-    assert o.computation == m**3 / (s * t * t) + m**2 + n * (t * t + z - 1) * m**2 / t**2
+    assert o.computation == (m**3 / (s * t * t) + m**2
+                             + n * (t * t + z - 1) * m**2 / t**2)
     assert o.storage == (2 * n + z + 1) * m**2 / t**2 + 2 * m**2 / (s * t) + t**2
     assert o.communication == n * (n - 1) * m**2 / t**2
 

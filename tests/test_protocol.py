@@ -1,6 +1,4 @@
 """End-to-end protocol tests: all 3 phases, stragglers, baselines, privacy."""
-import itertools
-
 import jax
 import numpy as np
 import pytest

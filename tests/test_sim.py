@@ -195,7 +195,7 @@ class TestRecalibration:
         pool = WorkerPool.of((PHONE, 2), (GATEWAY, 2))
         re = pool.recalibrated({"phone": (2.0, 3.0, 4.0)})
         assert len(re) == len(pool)
-        for w, r in zip(pool.workers, re.workers):
+        for w, r in zip(pool.workers, re.workers, strict=True):
             assert r.name == w.name
             if w.name == "phone":
                 assert (r.compute, r.storage, r.link) == (

@@ -1,7 +1,6 @@
 """Substrate tests: data determinism, checkpoint atomicity/resume, AdamW +
 WSD behavior, gradient compression, sharding rules."""
 import os
-import shutil
 import subprocess
 import sys
 import tempfile
@@ -82,8 +81,10 @@ def test_adamw_clipping():
 
 
 def test_wsd_schedule_shape():
-    lr = lambda s: float(wsd(s, peak_lr=1.0, warmup=10, stable=20, decay=10,
-                             floor=0.1))
+    def lr(s):
+        return float(wsd(s, peak_lr=1.0, warmup=10, stable=20, decay=10,
+                         floor=0.1))
+
     assert lr(0) == 0.0
     assert lr(5) == pytest.approx(0.5)
     assert lr(10) == pytest.approx(1.0)
@@ -105,8 +106,6 @@ def test_bf16_optimizer_state():
 
 # --------------------------------------------------------------- sharding --
 def test_spec_for_divisibility_guard():
-    mesh = jax.make_mesh((1,), ("model",))
-
     class FakeMesh:
         shape = {"data": 16, "model": 16}
 

@@ -106,8 +106,10 @@ def test_homogeneous_pool_ranking_matches_int_n(field):
     legacy = tune(20, 2, shape, field=field)
     pooled = tune(pool=WorkerPool.homogeneous(20), z=2, shape=shape,
                   field=field)
-    strip = lambda c: (c.scheme, c.s, c.t, c.lam, c.n_workers, c.m,  # noqa: E731
-                       c.n_blocks, c.over_budget, c.score)
+    def strip(c):
+        return (c.scheme, c.s, c.t, c.lam, c.n_workers, c.m,
+                c.n_blocks, c.over_budget, c.score)
+
     assert [strip(c) for c in legacy.candidates] == \
         [strip(c) for c in pooled.candidates]
     for f in ("scheme", "s", "t", "z", "lam", "m"):
