@@ -746,7 +746,10 @@ def connect(spec: MPCSpec, backend: str = "local", **opts) -> MPCSession:
     (``connect(MPCSpec.tune(N, z, shape))``).  ``backend``: ``"local"``
     (default; ``mode="fused"|"pallas"|"reference"``), ``"sharded"``
     (requires ``mesh=``, optional ``axis``, ``wire_dtype``, ``prg_masks``)
-    or ``"batched"`` (optional ``spares``, ``max_batch``) — or an
+    ``"batched"`` (optional ``spares``, ``max_batch``) or ``"remote"``
+    (out-of-process workers over the message-framed transport; optional
+    ``spawn="thread"|"process"``, ``pipelined``, ``recorder``, see
+    :class:`repro.mpc.backends.RemoteBackend` and DESIGN.md §13) — or an
     already-constructed backend instance.  Session-level options: ``key``
     (base PRNG key), ``tile_budget`` (shape-adapter dispatch cap, validated
     here so misconfiguration fails at connect time) and ``cost`` (a
@@ -771,14 +774,16 @@ def connect(spec: MPCSpec, backend: str = "local", **opts) -> MPCSession:
     key = opts.pop("key", None)
     tile_budget = opts.pop("tile_budget", DEFAULT_TILE_BUDGET)
     cost = opts.pop("cost", None)
-    if backend == "sharded" and (spec.adversaries
-                                 or opts.get("injector") is not None):
-        # the mesh runner has no verification hook yet (DESIGN.md §9);
-        # silently serving unverified shares under a Byzantine spec would
-        # defeat the budget's whole point — fail at connect time
+    if backend in ("sharded", "remote") and (
+            spec.adversaries or opts.get("injector") is not None):
+        # neither the mesh runner nor the wire transport carries the MAC
+        # tags verification needs (DESIGN.md §9); silently serving
+        # unverified shares under a Byzantine spec would defeat the
+        # budget's whole point — fail at connect time
         raise ValueError(
-            "the sharded backend does not verify shares: use the local or "
-            "batched backend for specs with adversaries > 0 / an injector")
+            f"the {backend} backend does not verify shares: use the local "
+            "or batched backend for specs with adversaries > 0 / an "
+            "injector")
     if cost is not None and backend == "batched":
         # the engine re-tunes under the same objective it serves with
         opts.setdefault("cost", cost)

@@ -85,6 +85,25 @@ class CalibrationWarning(RuntimeWarning):
     """
 
 
+class UnknownEntryWarning(RuntimeWarning):
+    """A bench entry contributed no usable calibration sample.
+
+    Emitted (once per entry name per process) by
+    :meth:`CostModel.from_bench` for trajectory entries whose ``derived``
+    column carries neither the Cor. 8–10 ``xi=…;sigma=…;zeta=…`` counts
+    nor a transport ``wire_zeta=…;wire_us=…`` pair — previously these
+    were skipped silently, which hid typos in new bench families from
+    the calibration.  Distinct from :class:`CalibrationWarning`: the fit
+    itself still proceeds on the usable samples.
+    """
+
+
+#: entry names already reported through UnknownEntryWarning — module
+#: scope, so repeated calibrations don't re-warn about the same
+#: intentionally-uncalibrated bench families (fleet_replay, …)
+_WARNED_UNKNOWN: set = set()
+
+
 # ============================================================== cost model
 @dataclasses.dataclass(frozen=True)
 class CostModel:
@@ -224,6 +243,14 @@ class CostModel:
         e.g. two schemes sharing one N — stay solvable; the weights are
         then ordering-grade, not physical attribution).
 
+        ``transport_*`` pairs additionally carry measured per-phase wire
+        legs as ``wire_zeta=…;wire_us=…`` segments (one per recorded
+        exchange sample); each becomes a pure-communication row, so ζ is
+        anchored to real wire time.  Entries contributing *no* usable
+        sample raise an :class:`UnknownEntryWarning` naming them — once
+        per entry name per process, so a typo'd bench family cannot
+        silently drop out of the calibration.
+
         Falls back to the paper's equal weights when the file is absent,
         malformed, has fewer than 3 usable samples, or fits degenerate
         (all-zero) weights — each fallback emits a
@@ -253,18 +280,45 @@ class CostModel:
                 f"{type(runs).__name__}")
         pat = re.compile(r"xi=([0-9.eE+-]+);sigma=([0-9.eE+-]+);"
                          r"zeta=([0-9.eE+-]+)")
-        rows, ys = [], []
+        wire_pat = re.compile(r"wire_zeta=([0-9.eE+-]+);"
+                              r"wire_us=([0-9.eE+-]+)")
+        rows, ys, unknown = [], [], []
         for run in runs:
             for e in (run.get("entries", []) if isinstance(run, dict)
                       else []):
-                m = pat.search(str(e.get("derived", "")))
+                derived = str(e.get("derived", ""))
+                usable = False
+                m = pat.search(derived)
                 us = e.get("fused_us")
                 if m and isinstance(us, (int, float)) and us > 0:
                     try:
                         rows.append([float(g) for g in m.groups()])
                         ys.append(float(us))
+                        usable = True
+                    except ValueError:
+                        pass  # nothing appended: the row parse failed
+                # transport pairs carry measured per-phase exchange legs:
+                # each wire_zeta/wire_us pair is a DIRECT ζ constraint
+                # (pure-communication row), so ζ is fit from real wire
+                # time instead of the fused block's blended total
+                for wm in wire_pat.finditer(derived):
+                    try:
+                        zt, wus = (float(wm.group(1)), float(wm.group(2)))
                     except ValueError:
                         continue
+                    if zt > 0 and wus > 0:
+                        rows.append([0.0, 0.0, zt])
+                        ys.append(wus)
+                        usable = True
+                if not usable:
+                    unknown.append(str(e.get("name", "<unnamed>")))
+        fresh = sorted(set(unknown) - _WARNED_UNKNOWN)
+        if fresh:
+            _WARNED_UNKNOWN.update(fresh)
+            warnings.warn(
+                f"CostModel.from_bench({path!r}): entries contributed no "
+                f"usable xi/sigma/zeta or wire_zeta/wire_us samples: "
+                f"{', '.join(fresh)}", UnknownEntryWarning, stacklevel=3)
         if len(rows) < 3:
             return _fall_back(
                 f"only {len(rows)} usable xi/sigma/zeta samples (need >= 3 "

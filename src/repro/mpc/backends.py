@@ -18,6 +18,10 @@ field-domain result — or a ``BlockFailure`` — per op, in order:
   vmapped ``decode`` per survivor pattern).  Session-level attrition
   (``MPCSession.fail``) routes into the engine's elastic pools, so spares
   and replan escalation behave exactly as under direct engine use.
+* :class:`RemoteBackend` — out-of-process workers over the message-framed
+  transport (:mod:`repro.transport`): spawned worker loops behind a
+  dealer, blocks served by the pipelined phase-overlapping driver, worker
+  death degraded into the same elastic fail → retune/replan path.
 
 Failure isolation is uniform: a block the backend cannot serve (mask
 below ``t²+z``, infeasible pool) becomes a ``BlockFailure`` in its slot
@@ -290,10 +294,222 @@ class BatchedBackend(MPCBackend):
         return outs
 
 
+class RemoteBackend(MPCBackend):
+    """Out-of-process execution over the worker transport (DESIGN.md §13).
+
+    Each serving group's N workers run behind a
+    :class:`~repro.transport.dealer.Dealer` — loopback worker threads by
+    default (``spawn="thread"``, the test/CI mode sharing the process-wide
+    plan cache), real spawned processes with ``spawn="process"`` — and
+    blocks are served by the pipelined protocol driver
+    (:func:`repro.transport.driver.run_blocks`; ``pipelined=False`` keeps
+    the phase-barriered baseline).  Decode is bit-identical to the local
+    backend: workers run the SAME staged jit programs on plan tables they
+    rebuild deterministically.
+
+    Failure semantics: a worker death before its phase-2 G row lands is a
+    phase-2 loss — the driver reports the dead slots, the backend routes
+    them through ``engine.fail`` (→ ``ElasticPool.fail_devices`` for pool
+    specs) and re-dispatches the lost blocks under the engine's
+    retune-before-replan escalation, exactly like in-process serving.
+    ``spares=0`` (the default here) makes ANY death escalate
+    deterministically — the transport cannot serve the in-process
+    spare-quorum path.  A death after the G row is a phase-3 loss the
+    survivor mask absorbs for free.
+
+    ``recorder`` (e.g. :class:`repro.sim.trace.PhaseRecorder`) receives
+    measured per-device ``compute``/``exchange`` wire samples, feeding
+    ``sim.calibrate`` / ``CostModel.from_bench`` with real ζ time.
+    """
+
+    name = "remote"
+    handles_attrition = True
+
+    #: phase-2 loss → fail → retune/replan → re-dispatch rounds before a
+    #: block gives up (escalation chains are short; 8 is generous)
+    MAX_ROUNDS = 8
+
+    def __init__(self, *, spawn: str = "thread", spares: int = 0,
+                 pipelined: bool = True, window: int = None,
+                 deadline_s: float = None, retries: int = None,
+                 backoff: float = None, delay_s: float = 0.0, cost=None,
+                 recorder=None, engine=None):
+        from .engine import MPCEngine
+
+        if engine is None:
+            engine = MPCEngine(spares=spares, cost=cost, recorder=recorder)
+        self.engine = engine
+        self.spawn = spawn
+        self.pipelined = pipelined
+        self.delay_s = float(delay_s)  # simulated link RTT (benchmarks)
+        self.recorder = recorder
+        self._driver_kw = {
+            k: v for k, v in (("window", window), ("deadline_s", deadline_s),
+                              ("retries", retries), ("backoff", backoff))
+            if v is not None}
+        self._dealers: Dict[tuple, object] = {}
+        self._dead: frozenset = frozenset()
+        self.stats = {"blocks": 0, "phase_losses": 0, "redispatches": 0,
+                      "masks_dropped": 0, "retries": 0, "evictions": 0,
+                      "phase3_absorbed": 0}
+
+    # -------------------------------------------------------------- dealers
+    def _dealer(self, serving):
+        from ..transport.dealer import Dealer
+
+        key = serving.group_key
+        d = self._dealers.get(key)
+        if d is None:
+            d = self._dealers[key] = Dealer(serving, spawn=self.spawn,
+                                            delay_s=self.delay_s)
+        return d
+
+    def _drop_dealer(self, key) -> None:
+        d = self._dealers.pop(key, None)
+        if d is not None:
+            d.close()
+
+    def close(self) -> None:
+        """Stop every spawned worker and close the links."""
+        for d in list(self._dealers.values()):
+            d.close()
+        self._dealers.clear()
+
+    def chaos(self, proto, device: int, **doc) -> None:
+        """Script a fault into one live worker of ``proto``'s serving
+        group (test hook; see :class:`repro.transport.worker._Chaos` and
+        ``byzantine.FaultInjector.to_json`` for the shared schedule
+        format)."""
+        serving = self.engine.serving_proto(proto)
+        self._dealer(serving).chaos(int(device), **doc)
+
+    # ------------------------------------------------------------ attrition
+    def fail(self, dead: frozenset) -> None:
+        self._dead = frozenset(dead)
+
+    def _report_attrition(self, proto) -> None:
+        if not self._dead:
+            return
+        pool = self.engine.pool(spec=proto.spec)
+        if pool.device_map is not None:  # pool spec: ids are device ids
+            pool.fail_devices(sorted(self._dead))
+            return
+        ids = [w for w in sorted(self._dead) if w < pool.pool_size]
+        if ids:
+            pool.fail(ids)
+
+    def drain_spec(self, spec, shape, *, batch: int = 1, cost=None,
+                   tile_budget=None):
+        if spec.m is None or not self._dead:
+            return None
+        from .protocol import AGECMPCProtocol
+
+        self._report_attrition(AGECMPCProtocol.from_spec(spec))
+        return self.engine.drain_spec(spec, shape, batch=batch, cost=cost,
+                                      tile_budget=tile_budget)
+
+    # --------------------------------------------------------------- blocks
+    def run_blocks(self, ops: Sequence[BlockOp]) -> List[BlockResult]:
+        import dataclasses
+
+        import numpy as np
+
+        from ..transport import driver as _driver
+        from ..transport.dealer import WorkerDown, slot_devices
+
+        if not ops:
+            return []
+        if self._dead:  # once per distinct serving group, not per block
+            seen = set()
+            for op in ops:
+                if op.proto.group_key not in seen:
+                    seen.add(op.proto.group_key)
+                    self._report_attrition(op.proto)
+        results: List[BlockResult] = [None] * len(ops)
+        pending = list(enumerate(ops))
+        for _ in range(self.MAX_ROUNDS):
+            if not pending:
+                break
+            groups: Dict[tuple, list] = {}
+            order: List[tuple] = []
+            for pos, op in pending:
+                try:
+                    serving = self.engine.serving_proto(op.proto)
+                except RuntimeError as e:  # infeasible pool: fail alone
+                    results[pos] = BlockFailure(str(e))
+                    continue
+                key = serving.group_key
+                if key not in groups:
+                    groups[key] = [serving]
+                    order.append(key)
+                groups[key].append((pos, op))
+            pending = []
+            for key in order:
+                serving, *items = groups[key]
+                n = serving.n_workers
+                pool = self.engine._pools.get(key)
+                # analysis: allow(host-sync): pool liveness is host data
+                pool_mask = (np.asarray(pool.alive[:n], bool)
+                             if pool is not None else np.ones(n, bool))
+                driver_ops = []
+                for pos, op in items:
+                    if op.proto.group_key != key:  # escalated away
+                        self._drop_dealer(op.proto.group_key)
+                    surv = op.survivors
+                    if surv is not None and op.proto.group_key != key:
+                        # sized for the pre-replan worker set: invalid now
+                        surv = None
+                        self.stats["masks_dropped"] += 1
+                    mask = pool_mask.copy()
+                    if surv is not None:
+                        # analysis: allow(host-sync): survivor masks are host data
+                        mask &= np.asarray(surv, bool)
+                    driver_ops.append(dataclasses.replace(
+                        op, proto=serving,
+                        survivors=None if mask.all() else mask))
+                try:
+                    dealer = self._dealer(serving)
+                except WorkerDown as e:  # group failed to come up
+                    self._drop_dealer(key)
+                    for pos, op in items:
+                        results[pos] = BlockFailure(str(e))
+                    continue
+                outcomes, dstats = _driver.run_blocks(
+                    dealer, driver_ops, pipelined=self.pipelined,
+                    recorder=self.recorder, **self._driver_kw)
+                for k in ("retries", "evictions", "phase3_absorbed"):
+                    self.stats[k] += dstats[k]
+                lost_devices: set = set()
+                for (pos, op), out in zip(items, outcomes, strict=True):
+                    if isinstance(out, _driver.PhaseLoss):
+                        lost_devices.update(
+                            slot_devices(serving.spec, out.slots))
+                        self.stats["phase_losses"] += 1
+                        pending.append((pos, op))
+                    elif isinstance(out, _driver.BlockError):
+                        results[pos] = BlockFailure(out.reason)
+                    else:
+                        results[pos] = out
+                        self.stats["blocks"] += 1
+                if lost_devices:
+                    # the in-process escalation path, verbatim: fail →
+                    # retune (m fixed) → replan; next round re-dispatches
+                    self.engine.fail(sorted(lost_devices),
+                                     spec=serving.spec)
+                    self._drop_dealer(key)
+                    self.stats["redispatches"] += 1
+        for pos, op in pending:
+            results[pos] = BlockFailure(
+                f"remote re-dispatch did not converge in "
+                f"{self.MAX_ROUNDS} rounds")
+        return results
+
+
 BACKENDS = {
     "local": LocalBackend,
     "sharded": ShardedBackend,
     "batched": BatchedBackend,
+    "remote": RemoteBackend,
 }
 
 

@@ -48,6 +48,7 @@ one spec-level budget (``MPCSpec(adversaries=a)``).
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -346,3 +347,77 @@ class FaultInjector:
         if round_id is None:
             return list(self.log)
         return [e for e in self.log if e[0] == int(round_id)]
+
+    # ------------------------------------------------------------- persist
+    #: fault-schedule file version (same discipline as sim.trace's
+    #: TRACE_VERSION — bump on any shape change)
+    SCHEDULE_VERSION = 1
+
+    def to_json(self) -> Dict:
+        """This injector's *configuration* as a JSON document.
+
+        The scripted schedule flattens to ``[round, slot, mode]`` triples
+        (event-list shape, like ``sim.trace`` records), so transport
+        chaos tests and fleet-sim replays consume ONE fault-schedule
+        file: :meth:`from_json` rebuilds the injector, and
+        :meth:`to_fleet_events` projects the same document onto
+        :class:`repro.sim.trace.FleetEvent` corruption events.  The
+        runtime :attr:`log`/stale caches are state, not configuration,
+        and do not round-trip.
+        """
+        sched: List[List] = []
+        if self.schedule is not None:
+            for rnd in sorted(int(r) for r in self.schedule):
+                for slot, mode in self.schedule[rnd]:
+                    sched.append([int(rnd), int(slot), str(mode)])
+        return {"version": self.SCHEDULE_VERSION, "seed": int(self.seed),
+                "schedule": sched, "rate": float(self.rate),
+                "slots": (None if self.slots is None
+                          else [int(s) for s in self.slots]),
+                "mode": str(self.mode)}
+
+    @classmethod
+    def from_json(cls, doc: Dict) -> "FaultInjector":
+        """Rebuild an injector from :meth:`to_json` output.  An empty
+        scripted schedule normalizes to ``schedule=None``."""
+        if doc.get("version") != cls.SCHEDULE_VERSION:
+            raise ValueError(
+                f"unsupported fault-schedule version {doc.get('version')!r}"
+                f" (expected {cls.SCHEDULE_VERSION})")
+        sched: Optional[Dict[int, List[Tuple[int, str]]]] = None
+        if doc.get("schedule"):
+            sched = {}
+            for rnd, slot, mode in doc["schedule"]:
+                sched.setdefault(int(rnd), []).append((int(slot),
+                                                      str(mode)))
+        slots = doc.get("slots")
+        return cls(seed=int(doc.get("seed", 0)), schedule=sched,
+                   rate=float(doc.get("rate", 0.0)),
+                   slots=(None if slots is None
+                          else tuple(int(s) for s in slots)),
+                   mode=str(doc.get("mode", "tamper")))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "FaultInjector":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    def to_fleet_events(self, *, round_us: float = 1.0) -> List:
+        """The scripted schedule as :class:`repro.sim.trace.FleetEvent`
+        corruption events (``at_us = round · round_us``) — the fleet-sim
+        replay view of the shared schedule file.  Rate-driven corruption
+        has no scripted times and is not projected."""
+        from ..sim.trace import FleetEvent
+
+        events = []
+        if self.schedule is not None:
+            for rnd in sorted(int(r) for r in self.schedule):
+                for slot, _mode in self.schedule[rnd]:
+                    events.append(FleetEvent(at_us=float(rnd) * round_us,
+                                             device=int(slot),
+                                             kind="corrupt"))
+        return events

@@ -308,6 +308,17 @@ class MPCEngine:
         return len(self._queue)
 
     # ------------------------------------------------------------- flush
+    def serving_proto(self, proto: AGECMPCProtocol) -> AGECMPCProtocol:
+        """The protocol ``proto``'s group is currently served under.
+
+        Public form of the flush-time escalation resolve — the remote
+        transport backend shares the engine's retune-before-replan
+        escalation (DESIGN.md §13) instead of reimplementing it.  Raises
+        :class:`~repro.mpc.errors.QuorumError` when the backing pool is
+        infeasible and no coarser partitioning fits.
+        """
+        return self._serving_proto(proto.group_key, proto)
+
     def _serving_proto(self, key: PlanKey, proto: AGECMPCProtocol
                        ) -> AGECMPCProtocol:
         """Resolve the protocol a group is served under, escalating
